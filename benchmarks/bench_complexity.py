@@ -1,0 +1,54 @@
+"""Paper Table 1: empirical scaling-exponent check of the complexity rows.
+
+Fits log-log slopes of measured time vs |D| (fixed M, |S|): pPITC/pPIC per-
+machine work should scale ~ (|D|/M)^3 block-cholesky once |D| dominates the
+|S|-terms; FGP ~ |D|^3. Slopes are reported in the derived column."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import covariance as cov, gp, ppic, ppitc, support
+from repro.data import synthetic
+from repro.parallel.runner import VmapRunner
+
+from benchmarks import common
+
+SIZES = (512, 1024, 2048)
+M = 8
+S_SIZE = 64
+
+
+def _slope(xs, ts):
+    lx, lt = np.log(np.asarray(xs)), np.log(np.asarray(ts))
+    return float(np.polyfit(lx, lt, 1)[0])
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(3)
+    sizes = SIZES[:2] if quick else SIZES
+    kfn = cov.make_kernel("se")
+    runner = VmapRunner(M=M)
+    times = {"fgp": [], "ppitc": [], "ppic": []}
+    for n in sizes:
+        ds = synthetic.standardize(synthetic.aimpeak_like(key, n=n,
+                                                          n_test=64))
+        params = cov.init_params(5, signal=1.0, noise=0.3, lengthscale=1.2,
+                                 dtype=jnp.float32)
+        S = support.select_support(kfn, params, ds.X[:512], S_SIZE)
+        times["fgp"].append(common.timeit(jax.jit(
+            lambda: gp.predict(kfn, params, ds.X, ds.y, ds.X_test,
+                               diag_only=True).mean)))
+        times["ppitc"].append(common.timeit(jax.jit(
+            lambda: ppitc.predict(kfn, params, S, ds.X, ds.y, ds.X_test,
+                                  runner).mean)))
+        times["ppic"].append(common.timeit(jax.jit(
+            lambda: ppic.predict(kfn, params, S, ds.X, ds.y, ds.X_test,
+                                 runner).mean)))
+    for name, ts in times.items():
+        common.emit(f"table1/{name}/slope", ts[-1],
+                    f"loglog_slope={_slope(sizes, ts):.2f};"
+                    f"times_us={';'.join(f'{t:.0f}' for t in ts)}")

@@ -1,0 +1,53 @@
+"""Beyond-paper: fault-tolerance / straggler benchmarks enabled by the
+summary algebra (Sec. 5.2 + DESIGN.md §5): accuracy vs straggler deadline,
+failure-recovery cost vs full recompute, online assimilation cost."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov, online, support
+from repro.data import synthetic
+from repro.parallel.runner import VmapRunner
+from repro.runtime import straggler
+
+from benchmarks import common
+
+N, M, S_SIZE = 2048, 16, 128
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(4)
+    n = 512 if quick else N
+    ds = synthetic.standardize(synthetic.aimpeak_like(key, n=n, n_test=256))
+    kfn = cov.make_kernel("se")
+    params = cov.init_params(5, signal=1.0, noise=0.3, lengthscale=1.0,
+                             dtype=jnp.float32)
+    S = support.select_support(kfn, params, ds.X[:512], S_SIZE)
+    runner = VmapRunner(M=M)
+
+    t_build = common.timeit(lambda: jax.tree.leaves(online.build(
+        kfn, params, S, ds.X, ds.y, runner))[0])
+    store = online.build(kfn, params, S, ds.X, ds.y, runner)
+
+    # straggler deadline sweep
+    rows = straggler.simulate(key, store, kfn, params, S, ds.X_test,
+                              ds.y_test, deadlines=(1.2, 2.0, 5.0, 50.0))
+    for r in rows:
+        common.emit(f"fault/straggler/deadline{r['deadline']}", t_build,
+                    f"fraction={r['fraction']:.2f};rmse={r['rmse']:.4f}")
+
+    # failure recovery: re-aggregation vs full rebuild
+    t_recover = common.timeit(lambda: jax.tree.leaves(
+        online.global_summary(online.retire(store, 3)))[0])
+    common.emit("fault/recover_degraded", t_recover,
+                f"full_rebuild_us={t_build:.0f};"
+                f"speedup_vs_rebuild={t_build / max(t_recover, 1e-9):.1f}")
+
+    # online assimilation of one new block vs rebuild
+    X2 = ds.X[: n // M]
+    y2 = ds.y[: n // M]
+    t_assim = common.timeit(lambda: jax.tree.leaves(online.assimilate(
+        store, kfn, params, S, X2, y2, VmapRunner(M=1)))[0])
+    common.emit("fault/online_assimilate_block", t_assim,
+                f"full_rebuild_us={t_build:.0f}")

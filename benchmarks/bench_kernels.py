@@ -1,0 +1,71 @@
+"""Kernel-level benches: covariance assembly (the pICF/pPITC hot spot) and
+flash attention, comparing reference jnp against the Pallas path.
+
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+wall-clock comparisons are meaningless; we report the jnp wall time plus the
+STRUCTURAL metrics that matter for the TPU target: VMEM tile residency and
+arithmetic intensity per tile (derived, printed in the derived column)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rbf import ops as rbf_ops
+from repro.kernels.rbf.ops import pick_blocks
+from repro.kernels.attention import ref as attn_ref
+
+from benchmarks import common
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(5)
+    shapes = [(2048, 2048, 8), (4096, 2048, 21)]
+    if quick:
+        shapes = shapes[:1]
+    for n, m, d in shapes:
+        Xq = jax.random.normal(key, (n, d), jnp.float32)
+        Xk = jax.random.normal(key, (m, d), jnp.float32)
+        t = common.timeit(jax.jit(
+            lambda: rbf_ops.rbf_covariance(Xq, Xk, 1.0, impl="jnp")))
+        d_pad = ((d + 127) // 128) * 128
+        bq, bk = pick_blocks(n, m, d_pad)
+        tile_bytes = (bq + bk) * d_pad * 4 + bq * bk * 4
+        flops = 2 * bq * bk * d_pad + 6 * bq * bk
+        common.emit(f"kernel/rbf/n{n}_m{m}_d{d}", t,
+                    f"block={bq}x{bk};tile_bytes={tile_bytes};"
+                    f"ai_flops_per_byte={flops / tile_bytes:.1f}")
+
+    B, H, T, D = 1, 8, 1024, 128
+    q = jax.random.normal(key, (B, H, T, D), jnp.float32)
+    k = jax.random.normal(key, (B, H, T, D), jnp.float32)
+    v = jax.random.normal(key, (B, H, T, D), jnp.float32)
+    t = common.timeit(jax.jit(
+        lambda: attn_ref.attention(q, k, v, causal=True)))
+    common.emit(f"kernel/attention_ref/T{T}", t,
+                f"flops={4 * B * H * T * T * D // 2}")
+
+    # chunked windowed attention (§Perf iteration 6): measured speedup
+    W = 128
+    t_full = common.timeit(jax.jit(
+        lambda: attn_ref.attention(q, k, v, causal=True, window=W)))
+    t_chunk = common.timeit(jax.jit(
+        lambda: attn_ref.attention_windowed_chunked(q, k, v, window=W)))
+    common.emit(f"kernel/attention_windowed/T{T}_W{W}", t_chunk,
+                f"masked_full_us={t_full:.0f};speedup={t_full / t_chunk:.2f}")
+
+    # SSD intra-chunk kernel: jnp scan wall time + kernel tile metrics
+    from repro.models.ssm import ssd_scan as ssd_ref_scan
+    Bz, L, Hs, P, N, cs = 2, 1024, 12, 64, 128, 256
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (Bz, L, Hs, P), jnp.float32)
+    dts = jax.nn.softplus(jax.random.normal(ks[1], (Bz, L, Hs)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hs,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (Bz, L, N), jnp.float32)
+    Cm = jax.random.normal(ks[4], (Bz, L, N), jnp.float32)
+    t = common.timeit(jax.jit(
+        lambda: ssd_ref_scan(xh, dts, A, Bm, Cm, cs)[0]))
+    tile_bytes = (cs * P + 2 * cs * N + cs * cs + P * N) * 4
+    tile_flops = 2 * cs * cs * N + 2 * cs * cs * P + 2 * cs * P * N
+    common.emit(f"kernel/ssd/L{L}_cs{cs}", t,
+                f"tile_bytes={tile_bytes};"
+                f"ai_flops_per_byte={tile_flops / tile_bytes:.1f}")

@@ -1,0 +1,47 @@
+"""LM substrate bench: reduced-config train-step and decode-step wall times
+for each assigned architecture family (CPU smoke scale — the full-scale
+numbers live in the dry-run roofline, EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import smoke_config
+from repro.launch import train as train_lib
+from repro.models import transformer as tf
+from repro.optim.adam import Adam
+
+from benchmarks import common
+
+ARCHS = ("qwen3-1.7b", "mixtral-8x22b", "mamba2-130m",
+         "jamba-1.5-large-398b", "whisper-medium")
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(6)
+    archs = ARCHS[:2] if quick else ARCHS
+    for name in archs:
+        cfg = smoke_config(name)
+        opt = Adam(lr=1e-3)
+        state = train_lib.init_state(key, cfg, opt)
+        toks = jax.random.randint(key, (4, 32), 0, cfg.vocab)
+        batch = {"tokens": toks, "labels": toks}
+        if cfg.enc_dec:
+            batch["frames"] = jax.random.normal(
+                key, (4, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        step, _ = train_lib.make_train_step(cfg, None, opt,
+                                            attn_impl="jnp", remat=False)
+        jstep = jax.jit(step)
+        state, m = jstep(state, batch)   # compile
+        t = common.timeit(lambda: jstep(state, batch)[1].loss, repeats=2,
+                          warmup=0)
+        common.emit(f"lm/train_step/{name}", t,
+                    f"loss={float(m.loss):.3f}")
+
+        params = tf.init_model(key, cfg)
+        sstate = tf.init_serve(cfg, 4, 64)
+        dstep = jax.jit(lambda p, t_, s: tf.decode_step(p, t_, s, cfg))
+        lg, sstate = dstep(params, toks[:, :1], sstate)
+        t = common.timeit(lambda: dstep(params, toks[:, :1], sstate)[0],
+                          repeats=2, warmup=0)
+        common.emit(f"lm/decode_step/{name}", t, "")

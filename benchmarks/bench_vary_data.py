@@ -1,0 +1,100 @@
+"""Paper Fig. 1: predictive performance + time vs data size |D|.
+
+Methods: FGP, pPITC/pPIC/pICF (vmap-parallel) and their centralized
+counterparts (blockwise/woodbury on one machine). Sizes are scaled to the
+CPU container; the trends (RMSE down with |D|, parallel time ~|D|^3/M^3 +
+|S|^2 terms, speedup growing with |D| — Sec. 6.2.1 observations) are the
+reproduction target."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov, gp, icf, picf, pitc, ppic, ppitc
+from repro.core import support
+from repro.data import synthetic
+from repro.parallel.runner import VmapRunner
+
+from benchmarks import common
+
+SIZES = (512, 1024, 2048, 4096)
+M = 8
+S_SIZE = 128
+RANK = 128
+
+
+def run(domain: str = "aimpeak", sizes=SIZES, quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    gen = (synthetic.aimpeak_like if domain == "aimpeak"
+           else synthetic.sarcos_like)
+    sizes = sizes[:2] if quick else sizes
+    kfn = cov.make_kernel("se")
+    runner = VmapRunner(M=M)
+
+    for n in sizes:
+        ds = synthetic.standardize(gen(key, n=n, n_test=256))
+        d = ds.X.shape[1]
+        ls = 1.2 if domain == "aimpeak" else 4.5
+        params = cov.init_params(d, signal=1.0, noise=0.3,
+                                 lengthscale=ls, dtype=jnp.float32)
+        S = support.select_support(kfn, params, ds.X[:min(n, 2048)], S_SIZE)
+        sum_bytes = (S_SIZE ** 2 + S_SIZE) * 4
+
+        # --- FGP (exact) on n <= 2048 (cubic blow-up beyond)
+        if n <= 2048:
+            t = common.timeit(
+                jax.jit(lambda: gp.predict(kfn, params, ds.X, ds.y,
+                                           ds.X_test, diag_only=True)))
+            post = gp.predict(kfn, params, ds.X, ds.y, ds.X_test,
+                              diag_only=True)
+            common.emit(f"fig1/{domain}/fgp/n{n}", t,
+                        f"rmse={common.rmse(post.mean, ds.y_test):.4f};"
+                        f"mnlp={common.mnlp(post.mean, post.var, ds.y_test):.3f}")
+
+        # --- pPITC / PITC
+        t_par = common.timeit(jax.jit(
+            lambda: ppitc.predict(kfn, params, S, ds.X, ds.y,
+                                  ds.X_test, runner).mean))
+        t_cen = common.timeit(jax.jit(
+            lambda: pitc.pitc_predict_blockwise(kfn, params, S, ds.X, ds.y,
+                                                ds.X_test, M).mean))
+        post = ppitc.predict(kfn, params, S, ds.X, ds.y, ds.X_test, runner)
+        mp = common.modeled_parallel_us(t_par, M, sum_bytes)
+        common.emit(f"fig1/{domain}/ppitc/n{n}", t_par,
+                    f"rmse={common.rmse(post.mean, ds.y_test):.4f};"
+                    f"mnlp={common.mnlp(post.mean, post.var, ds.y_test):.3f};"
+                    f"centralized_us={t_cen:.0f};modeled_par_us={mp:.0f};"
+                    f"modeled_speedup={t_cen / mp:.2f}")
+
+        # --- pPIC / PIC
+        t_par = common.timeit(jax.jit(
+            lambda: ppic.predict(kfn, params, S, ds.X, ds.y,
+                                 ds.X_test, runner).mean))
+        t_cen = common.timeit(jax.jit(
+            lambda: pitc.pic_predict_blockwise(kfn, params, S, ds.X, ds.y,
+                                               ds.X_test, M).mean))
+        post = ppic.predict(kfn, params, S, ds.X, ds.y, ds.X_test, runner)
+        mp = common.modeled_parallel_us(t_par, M, sum_bytes)
+        common.emit(f"fig1/{domain}/ppic/n{n}", t_par,
+                    f"rmse={common.rmse(post.mean, ds.y_test):.4f};"
+                    f"mnlp={common.mnlp(post.mean, post.var, ds.y_test):.3f};"
+                    f"centralized_us={t_cen:.0f};modeled_par_us={mp:.0f};"
+                    f"modeled_speedup={t_cen / mp:.2f}")
+
+        # --- pICF / ICF
+        sum_bytes_icf = (RANK ** 2 + RANK + RANK * 256) * 4
+        t_par = common.timeit(jax.jit(
+            lambda: picf.predict(kfn, params, ds.X, ds.y, ds.X_test, RANK,
+                                 runner, shard_u=True).mean))
+        fac = icf.icf_factor(kfn, params, ds.X, RANK)
+        t_cen = common.timeit(jax.jit(
+            lambda: icf.icf_predict(kfn, params, ds.X, ds.y, ds.X_test,
+                                    fac.F).mean))
+        post = picf.predict(kfn, params, ds.X, ds.y, ds.X_test, RANK,
+                            runner, shard_u=True)
+        mp = common.modeled_parallel_us(t_par, M, sum_bytes_icf)
+        common.emit(f"fig1/{domain}/picf/n{n}", t_par,
+                    f"rmse={common.rmse(post.mean, ds.y_test):.4f};"
+                    f"mnlp={common.mnlp(post.mean, post.var, ds.y_test):.3f};"
+                    f"centralized_us={t_cen:.0f};modeled_par_us={mp:.0f};"
+                    f"modeled_speedup={t_cen / mp:.2f}")

@@ -1,0 +1,53 @@
+"""Paper Fig. 3: performance vs parameter P (= |S| for pPITC/pPIC, = R for
+pICF). Reproduces Sec. 6.2.3: pICF needs much larger R than |S| for
+comparable accuracy; its MNLP degrades sharply at small R (non-PSD
+predictive covariance, Remark 2 after Thm 3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov, picf, ppic, ppitc, support
+from repro.data import synthetic
+from repro.parallel.runner import VmapRunner
+
+from benchmarks import common
+
+PARAMS = (32, 64, 128, 256)
+N = 2048
+M = 8
+
+
+def run(domain: str = "aimpeak", values=PARAMS, quick: bool = False):
+    key = jax.random.PRNGKey(2)
+    gen = (synthetic.aimpeak_like if domain == "aimpeak"
+           else synthetic.sarcos_like)
+    values = values[:2] if quick else values
+    n = 512 if quick else N
+    ds = synthetic.standardize(gen(key, n=n, n_test=256))
+    d = ds.X.shape[1]
+    kfn = cov.make_kernel("se")
+    ls = 1.2 if domain == "aimpeak" else 4.5
+    params = cov.init_params(d, signal=1.0, noise=0.3, lengthscale=ls,
+                             dtype=jnp.float32)
+    runner = VmapRunner(M=M)
+
+    for P in values:
+        S = support.select_support(kfn, params, ds.X[:min(n, 2048)], P)
+        for name, fn in (
+            ("ppitc", lambda: ppitc.predict(kfn, params, S, ds.X, ds.y,
+                                            ds.X_test, runner)),
+            ("ppic", lambda: ppic.predict(kfn, params, S, ds.X, ds.y,
+                                          ds.X_test, runner)),
+            ("picf", lambda: picf.predict(kfn, params, ds.X, ds.y,
+                                          ds.X_test, P, runner,
+                                          shard_u=True)),
+        ):
+            t = common.timeit(jax.jit(lambda fn=fn: fn().mean))
+            post = fn()
+            neg_var = float(jnp.mean((post.var < 0).astype(jnp.float32)))
+            common.emit(
+                f"fig3/{domain}/{name}/P{P}", t,
+                f"rmse={common.rmse(post.mean, ds.y_test):.4f};"
+                f"mnlp={common.mnlp(post.mean, post.var, ds.y_test):.3f};"
+                f"neg_var_frac={neg_var:.3f}")

@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: timing, metrics, CSV emission.
+
+CPU-container caveat (documented in EXPERIMENTS.md): wall times here are
+single-CPU. The vmap runner executes the M simulated machines SERIALLY, so
+parallel-method wall times are divided into per-machine compute (total/M)
+plus a communication model using the paper's MPI-style O(log M) rounds with
+v5e link bandwidth — reported separately as `modeled_parallel_us` and
+clearly labeled. RMSE/MNLP are exact (hardware-independent).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline import hw
+
+ROWS: list[tuple] = []
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall microseconds of a blocking call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def rmse(pred, truth) -> float:
+    return float(jnp.sqrt(jnp.mean((pred - truth) ** 2)))
+
+
+def mnlp(pred_mean, pred_var, truth) -> float:
+    """Mean negative log probability (paper Sec. 6.1)."""
+    v = jnp.maximum(pred_var, 1e-9)
+    return float(0.5 * jnp.mean((truth - pred_mean) ** 2 / v
+                                + jnp.log(2 * jnp.pi * v)))
+
+
+def comm_model_us(n_bytes: float, M: int) -> float:
+    """O(log M) aggregation rounds at ICI bandwidth (Sec. 5.1 assumption d)."""
+    rounds = max(math.ceil(math.log2(max(M, 2))), 1)
+    return n_bytes * rounds / (hw.ICI_BW_PER_LINK) * 1e6
+
+
+def modeled_parallel_us(total_us: float, M: int, summary_bytes: float) -> float:
+    """Serial-vmap total split across M machines + modeled collective."""
+    return total_us / M + comm_model_us(summary_bytes, M)
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")

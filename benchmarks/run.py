@@ -1,0 +1,53 @@
+"""Benchmark harness entry point — one module per paper table/figure plus
+the beyond-paper fault/kernel/LM benches. Prints ``name,us_per_call,derived``
+CSV rows (and collects them in benchmarks.common.ROWS).
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
+    PYTHONPATH=src python -m benchmarks.run --only fig1
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter: fig1|fig2|fig3|table1|fault|"
+                         "kernel|lm")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_complexity, bench_fault, bench_kernels,
+                            bench_lm_smoke, bench_vary_data,
+                            bench_vary_machines, bench_vary_param)
+
+    suites = [
+        ("fig1", lambda: [bench_vary_data.run("aimpeak", quick=args.quick),
+                          bench_vary_data.run("sarcos", quick=args.quick)]),
+        ("fig2", lambda: bench_vary_machines.run("aimpeak",
+                                                 quick=args.quick)),
+        ("fig3", lambda: bench_vary_param.run("aimpeak", quick=args.quick)),
+        ("table1", lambda: bench_complexity.run(quick=args.quick)),
+        ("fault", lambda: bench_fault.run(quick=args.quick)),
+        ("kernel", lambda: bench_kernels.run(quick=args.quick)),
+        ("lm", lambda: bench_lm_smoke.run(quick=args.quick)),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness going, report at exit
+            failures.append((name, repr(e)))
+            print(f"{name}/ERROR,0,{e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

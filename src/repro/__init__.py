@@ -1,0 +1,4 @@
+"""repro — parallel GP regression with low-rank covariance approximations
+(pPITC / pPIC / pICF) as a production JAX framework, plus the assigned
+LM architecture zoo, multi-pod launcher, and roofline tooling."""
+__version__ = "1.0.0"

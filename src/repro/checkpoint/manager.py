@@ -1,0 +1,75 @@
+"""Checkpoint manager: rotation, async save, elastic restore.
+
+Async saves copy the (host-side) snapshot on the caller thread — cheap
+relative to serialization — then write on a background thread so the training
+loop isn't blocked (the paper-scale analogue: summary/optimizer state must
+persist without stalling the all-reduce pipeline). Restore reshard onto any
+mesh (see checkpoint/io.py).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import threading
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path, *, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def _path(self, step: int) -> pathlib.Path:
+        return self.dir / f"ckpt_{step:010d}.msgpack"
+
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("ckpt_*.msgpack"):
+            m = re.match(r"ckpt_(\d+)\.msgpack", p.name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, tree, *, sync: bool = True) -> None:
+        if sync:
+            io.save(self._path(step), tree)
+            self._rotate()
+            return
+        self.wait()
+        snapshot = jax.tree.map(lambda a: np.asarray(a), tree)
+
+        def work():
+            io.save(self._path(step), snapshot)
+            self._rotate()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, step: int, tree_like, *, shardings=None):
+        return io.load(self._path(step), tree_like, shardings=shardings)
+
+    def restore_latest(self, tree_like, *, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, tree_like, shardings=shardings)
+
+    def _rotate(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            self._path(s).unlink(missing_ok=True)

@@ -1,0 +1,17 @@
+"""Core library: the paper's contribution (parallel GP regression with
+low-rank covariance approximations) as composable JAX modules.
+
+Layout:
+  covariance / linalg        kernel functions + PSD solve helpers
+  gp                         exact FGP (eqs. 1-2)
+  pitc / icf                 centralized counterparts (Thm oracles + Table 1 rows)
+  ppitc / ppic / picf        the paper's parallel methods (Secs. 3-4)
+  support / clustering       support-set selection + (D_m, U_m) co-clustering
+  online                     incremental summary assimilation (Sec. 5.2)
+  hyper                      marginal-likelihood hyperparameter MLE
+"""
+from repro.core import (covariance, gp, icf, linalg, picf, pitc, ppic,  # noqa
+                        ppitc)
+from repro.core.covariance import init_params, make_kernel  # noqa
+from repro.core.gp import GPPosterior  # noqa
+from repro.core.ppitc import ParallelPosterior  # noqa

@@ -1,0 +1,68 @@
+"""Parallelized co-clustering of (D_m, U_m) — Remark 2 after Def. 5.
+
+pPIC's local correction helps only if y_{D_m} and Y_{U_m} are correlated, so
+training and test inputs must be co-located per machine. The paper's scheme:
+each machine proposes one random center from its block, centers are shared
+(all-gather), every point goes to its nearest center subject to the capacity
+constraint |D_i| <= |D|/M, |U_i| <= |U|/M.
+
+This is a *data-pipeline* step (host-side, pre-sharding), so it is implemented
+in NumPy: capacity-constrained nearest-center assignment is a greedy fill in
+best-distance order — O(n log n), deterministic given the key.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def propose_centers(X: np.ndarray, M: int, key) -> np.ndarray:
+    """Each machine m picks one random center from its block (Def. 1 layout)."""
+    n = X.shape[0]
+    b = n // M
+    offs = jax.random.randint(key, (M,), 0, b)
+    idx = np.asarray(offs) + np.arange(M) * b
+    return X[idx]
+
+
+def capacity_assign(X: np.ndarray, centers: np.ndarray,
+                    capacity: int) -> np.ndarray:
+    """Greedy capacity-constrained nearest-center assignment.
+
+    Points are processed in order of their best-center distance (closest
+    first); a full machine falls through to the next-nearest center.
+    Returns machine id per point; every machine gets exactly ``capacity``.
+    """
+    n, M = X.shape[0], centers.shape[0]
+    assert n == M * capacity, "capacity must evenly fill all machines"
+    d2 = ((X[:, None, :] - centers[None, :, :]) ** 2).sum(-1)   # (n, M)
+    pref = np.argsort(d2, axis=1)                               # (n, M)
+    order = np.argsort(d2.min(axis=1))
+    assign = np.full(n, -1, np.int64)
+    load = np.zeros(M, np.int64)
+    for p in order:
+        for c in pref[p]:
+            if load[c] < capacity:
+                assign[p] = c
+                load[c] += 1
+                break
+    return assign
+
+
+def cocluster(X: np.ndarray, y: np.ndarray, U: np.ndarray, M: int, key):
+    """Full Remark-2 scheme. Returns permuted (X, y, U) in block layout plus
+    the permutations (so predictions can be un-permuted)."""
+    X, y, U = np.asarray(X), np.asarray(y), np.asarray(U)
+    centers = propose_centers(X, M, key)
+    a_d = capacity_assign(X, centers, X.shape[0] // M)
+    a_u = capacity_assign(U, centers, U.shape[0] // M)
+    perm_d = np.argsort(a_d, kind="stable")
+    perm_u = np.argsort(a_u, kind="stable")
+    return X[perm_d], y[perm_d], U[perm_u], perm_d, perm_u
+
+
+def uncluster(values: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    """Invert a cocluster permutation on per-point outputs."""
+    out = np.empty_like(values)
+    out[perm] = values
+    return out

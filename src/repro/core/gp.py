@@ -1,0 +1,65 @@
+"""Full (exact) Gaussian process regression — paper Sec. 2, eqs. (1)-(2).
+
+This is FGP: the O(|D|^3) centralized baseline every approximation is measured
+against (paper Figs. 1-3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov
+from repro.core import linalg
+
+
+class GPPosterior(NamedTuple):
+    """Predictive Gaussian N(mean, cov); ``var`` is diag(cov)."""
+    mean: jax.Array
+    cov: jax.Array
+
+    @property
+    def var(self) -> jax.Array:
+        return jnp.diag(self.cov)
+
+
+def predict(kfn: cov.KernelFn, params: dict,
+            X_train: jax.Array, y_train: jax.Array, X_test: jax.Array,
+            mean_fn=None, *, diag_only: bool = False) -> GPPosterior:
+    """Eqs. (1)-(2): mu_{U|D}, Sigma_{UU|D} with Sigma_DD including noise."""
+    mu_d = _mean(mean_fn, X_train, y_train.dtype)
+    mu_u = _mean(mean_fn, X_test, y_train.dtype)
+
+    K_dd = cov.add_noise(kfn(params, X_train, X_train), params)
+    K_ud = kfn(params, X_test, X_train)
+    L = linalg.chol(K_dd)
+
+    alpha = linalg.chol_solve(L, (y_train - mu_d)[:, None])[:, 0]
+    mean = mu_u + K_ud @ alpha
+
+    V = linalg.tri_solve(L, K_ud.T)           # L^{-1} K_du
+    if diag_only:
+        var = cov.kdiag(kfn, params, X_test) - jnp.sum(V * V, axis=0)
+        return GPPosterior(mean, jnp.diag(var))
+    K_uu = kfn(params, X_test, X_test)
+    return GPPosterior(mean, K_uu - V.T @ V)
+
+
+def nlml(kfn: cov.KernelFn, params: dict,
+         X_train: jax.Array, y_train: jax.Array, mean_fn=None) -> jax.Array:
+    """Negative log marginal likelihood -log p(y_D | theta) for MLE."""
+    n = X_train.shape[0]
+    mu_d = _mean(mean_fn, X_train, y_train.dtype)
+    K = cov.add_noise(kfn(params, X_train, X_train), params)
+    L = linalg.chol(K)
+    r = (y_train - mu_d)[:, None]
+    alpha = linalg.chol_solve(L, r)
+    return 0.5 * (r.T @ alpha)[0, 0] + 0.5 * linalg.logdet_from_chol(L) \
+        + 0.5 * n * jnp.log(2.0 * jnp.pi)
+
+
+def _mean(mean_fn, X: jax.Array, dtype) -> jax.Array:
+    if mean_fn is None:
+        return jnp.zeros((X.shape[0],), dtype)
+    return mean_fn(X)

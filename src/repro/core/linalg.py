@@ -1,0 +1,55 @@
+"""Shared PSD linear-algebra helpers used across the GP stack.
+
+All solves in this package funnel through these helpers so that jitter policy
+and dtype behaviour are uniform (the paper's MPI/LAPACK float64 pipeline maps
+onto jax.scipy cholesky solves; equivalence tests run in float64, performance
+paths in float32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Jitter scaled to dtype: float64 paths need far less regularisation.
+_JITTER = {jnp.float64.dtype: 1e-10, jnp.float32.dtype: 1e-6}
+
+
+def default_jitter(dtype) -> float:
+    return _JITTER.get(jnp.dtype(dtype), 1e-6)
+
+
+def add_jitter(K: jax.Array, jitter: float | None = None) -> jax.Array:
+    """K + jitter * mean(diag(K)) * I — relative jitter keeps scale-invariance."""
+    if jitter is None:
+        jitter = default_jitter(K.dtype)
+    scale = jnp.mean(jnp.diag(K))
+    return K + (jitter * scale) * jnp.eye(K.shape[-1], dtype=K.dtype)
+
+
+def chol(K: jax.Array, jitter: float | None = None) -> jax.Array:
+    """Lower Cholesky factor of a PSD matrix with relative jitter."""
+    return jnp.linalg.cholesky(add_jitter(K, jitter))
+
+
+def chol_solve(L: jax.Array, B: jax.Array) -> jax.Array:
+    """Solve (L Lᵀ) X = B given lower Cholesky L."""
+    return jax.scipy.linalg.cho_solve((L, True), B)
+
+
+def psd_solve(K: jax.Array, B: jax.Array, jitter: float | None = None) -> jax.Array:
+    """Solve K X = B for PSD K via jittered Cholesky."""
+    return chol_solve(chol(K, jitter), B)
+
+
+def psd_inv(K: jax.Array, jitter: float | None = None) -> jax.Array:
+    return psd_solve(K, jnp.eye(K.shape[-1], dtype=K.dtype), jitter)
+
+
+def tri_solve(L: jax.Array, B: jax.Array, *, lower: bool = True,
+              trans: bool = False) -> jax.Array:
+    return jax.scipy.linalg.solve_triangular(L, B, lower=lower,
+                                             trans=1 if trans else 0)
+
+
+def logdet_from_chol(L: jax.Array) -> jax.Array:
+    return 2.0 * jnp.sum(jnp.log(jnp.diag(L)))

@@ -1,0 +1,85 @@
+"""Online/incremental learning (Sec. 5.2) + summary-algebra fault tolerance.
+
+The pPITC/pPIC global summary (eqs. 5-6) is an algebraic SUM of per-machine
+local summaries, so:
+
+* new data blocks fold in with an add (no recompute of old blocks' O(b^3)
+  inverses) — the paper's streaming argument;
+* a failed machine folds OUT with a subtract — survivors' work is preserved
+  and the posterior remains a *valid* PITC/PIC posterior over the surviving
+  data (runtime/fault.py builds on this);
+* elastic scale-up/down is re-blocking + re-summing cached summaries.
+
+The store keeps the stacked per-machine summaries (cheap: M x (|S| + |S|^2))
+and the running global summary.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linalg
+from repro.core.ppitc import GlobalSummary, LocalSummary, local_summary
+from repro.parallel.runner import Runner
+
+
+class SummaryStore(NamedTuple):
+    locals_: LocalSummary     # stacked (M, ...) per-machine summaries
+    alive: jax.Array          # (M,) bool — machine participation mask
+    Kss: jax.Array            # (s, s) prior support covariance
+
+
+def build(kfn, params, S, X, y, runner: Runner) -> SummaryStore:
+    """Initial store from blocked data (paper Steps 1-3)."""
+    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+
+    def fn(Xm, ym, params, S):
+        Kss_L = linalg.chol(kfn(params, S, S))
+        loc, _ = local_summary(kfn, params, S, Kss_L, Xm, ym)
+        return loc
+
+    locals_ = runner.map(fn, (Xb, yb), (params, S))
+    alive = jnp.ones((runner.num_machines,), bool)
+    return SummaryStore(locals_, alive, kfn(params, S, S))
+
+
+def global_summary(store: SummaryStore) -> GlobalSummary:
+    """Assemble eqs. (5)-(6) from whatever machines are alive."""
+    w = store.alive.astype(store.locals_.ydot.dtype)
+    ydd = jnp.einsum("m,ms->s", w, store.locals_.ydot)
+    Sdd = store.Kss + jnp.einsum("m,mst->st", w, store.locals_.Sdot)
+    return GlobalSummary(ydd, Sdd)
+
+
+def assimilate(store: SummaryStore, kfn, params, S, X_new, y_new,
+               runner: Runner) -> SummaryStore:
+    """Fold a new data stream (D', y_D') in — Sec. 5.2.
+
+    The new blocks are summarized in parallel and appended; old summaries are
+    reused untouched (this is the saving over recomputing eqs. 3-4 for D)."""
+    new = build(kfn, params, S, X_new, y_new, runner)
+    merged = LocalSummary(
+        jnp.concatenate([store.locals_.ydot, new.locals_.ydot]),
+        jnp.concatenate([store.locals_.Sdot, new.locals_.Sdot]))
+    alive = jnp.concatenate([store.alive, new.alive])
+    return SummaryStore(merged, alive, store.Kss)
+
+
+def retire(store: SummaryStore, machine: int) -> SummaryStore:
+    """Drop a machine's contribution (failure or decommission)."""
+    return store._replace(alive=store.alive.at[machine].set(False))
+
+
+def revive(store: SummaryStore, machine: int) -> SummaryStore:
+    return store._replace(alive=store.alive.at[machine].set(True))
+
+
+def predict_ppitc(store: SummaryStore, kfn, params, S, U) -> tuple:
+    """pPITC prediction (eqs. 7-8) straight from the store (centralized-side
+    convenience; the distributed path uses ppitc.predict_from_summary)."""
+    from repro.core.ppitc import predict_from_summary
+    Kss_L = linalg.chol(store.Kss)
+    return predict_from_summary(kfn, params, S, Kss_L, global_summary(store),
+                                U)

@@ -1,0 +1,192 @@
+"""pICF-based GP — parallel incomplete Cholesky factorization GP (Sec. 4).
+
+Step 2's row-based parallel ICF (Chang et al. 2007) is adapted to the TPU
+mesh: the rank loop is a ``lax.fori_loop``; per iteration the global pivot is
+an all-reduce argmax and the pivot's feature vector / factor column are
+broadcast as masked psums (owner contributes, others contribute zeros) — the
+collective realization of the MPI pivot broadcast. Communication per step is
+O(d + R); O(R(d+R)) total, matching Table 1's O(R^2 log M) summary term.
+
+Steps 3-6 (eqs. 19-27) then need one psum of (R, R+1+u') quantities and an
+R x R solve. Two prediction layouts:
+
+* ``machine_step``            — U replicated (Defs. 8-9 as written);
+* ``machine_step_sharded_u``  — U sharded over machines (the Remark after
+  Def. 7): Sigma-dot chunks are exchanged with ``lax.all_to_all`` and the
+  predictive components combined with ``lax.psum_scatter``, cutting the
+  per-machine collective payload from O(R|U|) to O(R|U|/M).
+
+Zero prior mean assumed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov
+from repro.core import linalg
+from repro.core.gp import GPPosterior
+from repro.core.ppitc import ParallelPosterior
+from repro.parallel.runner import Runner
+
+
+class ICFLocal(NamedTuple):
+    F: jax.Array         # (R, b) this machine's factor columns
+    residual: jax.Array  # (b,)   local diagonal residual
+
+
+def icf_factor_local(kfn, params, Xm, R: int, *, axis_name) -> ICFLocal:
+    """Distributed pivoted incomplete Cholesky of the signal kernel.
+
+    Concatenating the returned F over machines (in machine order) equals the
+    centralized ``core.icf.icf_factor`` on concatenated data, pivot-for-pivot
+    (Theorem-3 equivalence test).
+    """
+    b = Xm.shape[0]
+    m_idx = jax.lax.axis_index(axis_name)
+    d0 = cov.kdiag(kfn, params, Xm)
+    # zeros + 0*d0 marks F0 as device-varying so the shard_map scan carry
+    # type-checks (VMA inference); a no-op after fusion.
+    F0 = jnp.zeros((R, b), d0.dtype) + 0.0 * d0[None, :]
+
+    def step(i, carry):
+        F, d = carry
+        # --- global pivot selection: argmax over machines of local maxima
+        local_max = jnp.max(d)
+        local_arg = jnp.argmax(d)
+        gmax = jax.lax.all_gather(local_max, axis_name)       # (M,)
+        owner = jnp.argmax(gmax)
+        dp = jnp.max(gmax)
+        is_owner = (owner == m_idx)
+        # --- owner broadcasts pivot input x_p and partial column F[:, p]
+        xp = jax.lax.psum(jnp.where(is_owner, Xm[local_arg], 0.0), axis_name)
+        fp = jax.lax.psum(jnp.where(is_owner, F[:, local_arg], 0.0), axis_name)
+        # --- local rank-1 update (each machine only touches its columns)
+        col = kfn(params, xp[None], Xm)[0]                    # K[p, D_m]
+        f = (col - F.T @ fp) / jnp.sqrt(jnp.maximum(dp, 1e-30))
+        F = jax.lax.dynamic_update_slice_in_dim(F, f[None], i, axis=0)
+        d = jnp.maximum(d - f * f, 0.0)
+        d = jnp.where(is_owner, d.at[local_arg].set(0.0), d)
+        return F, d
+
+    F, d = jax.lax.fori_loop(0, R, step, (F0, d0))
+    return ICFLocal(F, d)
+
+
+def _global_pieces(params, Fm, ym, Sdot_m, *, axis_name):
+    """Steps 3-4 (eqs. 19-23): fused psum of [Phi_m | ydot_m | Sdot_m]."""
+    s2 = cov.noise_var(params)
+    R = Fm.shape[0]
+    ydot = Fm @ ym                                          # (R,)   eq. 19
+    Phi_m = Fm @ Fm.T                                       # (R, R) eq. 21
+    # fuse the three all-reduces into one message (overlap-friendly)
+    packed = jnp.concatenate(
+        [Phi_m, ydot[:, None], Sdot_m], axis=1)             # (R, R+1+u)
+    packed = jax.lax.psum(packed, axis_name)
+    Phi = jnp.eye(R, dtype=Fm.dtype) + packed[:, :R] / s2
+    Phi_L = linalg.chol(Phi, jitter=0.0)
+    ydd = linalg.chol_solve(Phi_L, packed[:, R:R + 1])[:, 0]        # eq. 22
+    Sdd = linalg.chol_solve(Phi_L, packed[:, R + 1:])               # eq. 23
+    return ydd, Sdd
+
+
+def machine_step(kfn, params, Xm, ym, U, Fm, *, axis_name):
+    """Steps 3-6 with replicated U. Returns replicated (mean_U, cov_UU)."""
+    s2 = cov.noise_var(params)
+    Kud = kfn(params, U, Xm)                                # (u, b)
+    Sdot_m = Fm @ Kud.T                                     # (R, u) eq. 20
+    ydd, Sdd = _global_pieces(params, Fm, ym, Sdot_m, axis_name=axis_name)
+    # eqs. (24)-(25): predictive components; (26)-(27): psum-combine
+    mu_m = Kud @ ym / s2 - Sdot_m.T @ ydd / s2**2
+    Sig_m = Kud @ Kud.T / s2 - Sdot_m.T @ Sdd / s2**2
+    mean = jax.lax.psum(mu_m, axis_name)
+    Kuu = kfn(params, U, U)
+    covm = Kuu - jax.lax.psum(Sig_m, axis_name)
+    return mean, covm
+
+
+def machine_step_sharded_u(kfn, params, Xm, ym, Ub_all, Fm, *, axis_name):
+    """Steps 3-6 with U sharded (Remark after Def. 7), reduce-scatter form.
+
+    ``Ub_all``: (M, u/M, d) — every machine sees the chunk layout of U (cheap:
+    inputs only). Machine m computes Sigma-dot against all of U but only
+    chunk-sized pieces cross the network:
+
+      * Phi, ydot  — one (R, R+1) all-reduce (the paper's O(R^2 log M));
+      * Sdot       — ``psum_scatter``: machine i receives S_i = sum_m
+        Sdot_m^{(i)} — exactly the paper's "each machine m sends Sdot_m^i to
+        machine i";
+      * the cross terms fold algebraically:
+            sum_m (Sdot_m^i)^T ydd   = S_i^T ydd
+            sum_m (Sdot_m^i)^T Sdd^i = S_i^T Phi^{-1} S_i
+        so no machine ever needs the full (R, |U|) global Sigma-dot.
+
+    §Perf (GP cells): this cut pICF collective bytes 302MB -> ~20MB at
+    |U| = 32768, R = 2048, M = 256.
+    """
+    s2 = cov.noise_var(params)
+    M, bu, _ = Ub_all.shape
+    U = Ub_all.reshape(M * bu, -1)
+    m_idx = jax.lax.axis_index(axis_name)
+    R = Fm.shape[0]
+
+    Kud = kfn(params, U, Xm)                                # (u, b)
+    Sdot_m = Fm @ Kud.T                                     # (R, u)
+    ydot_m = Fm @ ym                                        # (R,)
+    Phi_m = Fm @ Fm.T                                       # (R, R)
+
+    packed = jax.lax.psum(
+        jnp.concatenate([Phi_m, ydot_m[:, None]], axis=1), axis_name)
+    Phi_L = linalg.chol(jnp.eye(R, dtype=Fm.dtype) + packed[:, :R] / s2,
+                        jitter=0.0)
+    ydd = linalg.chol_solve(Phi_L, packed[:, R:])[:, 0]     # eq. 22
+
+    # reduce-scatter the Sdot chunks: machine i gets S_i = sum_m Sdot_m^i
+    S_i = jax.lax.psum_scatter(
+        Sdot_m.reshape(R, M, bu).transpose(1, 0, 2), axis_name,
+        scatter_dimension=0, tiled=False)                   # (R, bu)
+    Sdd_i = linalg.chol_solve(Phi_L, S_i)                   # eq. 23, chunk i
+
+    mean_chunk = (jax.lax.psum_scatter(
+        (Kud @ ym / s2).reshape(M, bu), axis_name,
+        scatter_dimension=0, tiled=False)
+        - S_i.T @ ydd / s2**2)                              # eqs. 24/26
+
+    Kud_c = Kud.reshape(M, bu, -1)                          # (M, bu, b)
+    blocks = jnp.einsum("mib,mjb->mij", Kud_c, Kud_c) / s2
+    Sig_chunk = (jax.lax.psum_scatter(
+        blocks, axis_name, scatter_dimension=0, tiled=False)
+        - S_i.T @ Sdd_i / s2**2)                            # eqs. 25/27
+
+    Um = Ub_all[m_idx]
+    return mean_chunk, kfn(params, Um, Um) - Sig_chunk
+
+
+def factor(kfn, params, X, R: int, runner: Runner) -> ICFLocal:
+    """Distributed ICF over a Runner; returns stacked (M, R, b) factors."""
+    Xb = runner.shard_blocks(X)
+    fn = lambda Xm, params: icf_factor_local(kfn, params, Xm, R,
+                                             axis_name=runner.axis_name)
+    return runner.map(fn, (Xb,), (params,))
+
+
+def predict(kfn, params, X, y, U, R: int, runner: Runner, *,
+            shard_u: bool = False):
+    """End-to-end pICF-based GP regression over a Runner."""
+    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+    local = factor(kfn, params, X, R, runner)
+
+    if shard_u:
+        Ub = runner.shard_blocks(U)
+        fn = lambda Xm, ym, Fm, params, Ub_all: machine_step_sharded_u(
+            kfn, params, Xm, ym, Ub_all, Fm, axis_name=runner.axis_name)
+        means, covs = runner.map(fn, (Xb, yb, local.F), (params, Ub))
+        return ParallelPosterior(runner.unshard(means), covs)
+
+    fn = lambda Xm, ym, Fm, params, U: machine_step(
+        kfn, params, Xm, ym, U, Fm, axis_name=runner.axis_name)
+    means, covs = runner.map(fn, (Xb, yb, local.F), (params, U))
+    # replicated outputs: every machine holds the same full posterior
+    return GPPosterior(means[0], covs[0])

@@ -1,0 +1,198 @@
+"""Centralized PITC and PIC approximations of FGP.
+
+These are the *centralized counterparts* that Theorems 1 and 2 prove our
+parallel methods equal:
+
+  PITC — eqs. (9)-(11)  (Quinonero-Candela & Rasmussen 2005)
+  PIC  — eqs. (15)-(18) (Snelson 2007)
+
+Two implementations each:
+  * ``*_literal``  — builds Gamma_DD + Lambda as a dense |D|x|D| matrix exactly
+    as written in the theorem statements. O(|D|^2) memory; this is the oracle
+    the equivalence tests compare the parallel methods against.
+  * ``*_blockwise`` — the efficient centralized algorithm (block loop on one
+    machine, Table 1 complexity row "PITC"/"PIC") used by the benchmark
+    harness for the speedup curves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov
+from repro.core import linalg
+from repro.core.gp import GPPosterior
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _gamma(kfn, params, S, A, B, Kss_L):
+    """Gamma_AB = K_AS K_SS^{-1} K_SB   (eq. 11), via cholesky of K_SS."""
+    Vas = linalg.tri_solve(Kss_L, kfn(params, S, A)).T   # K_AS Kss^{-1/2}
+    Vbs = linalg.tri_solve(Kss_L, kfn(params, S, B))     # Kss^{-1/2} K_SB
+    return Vas @ Vbs
+
+
+def _blocks(n: int, M: int) -> list[slice]:
+    assert n % M == 0, f"|D|={n} must divide among M={M} machines (Def. 1)"
+    b = n // M
+    return [slice(m * b, (m + 1) * b) for m in range(M)]
+
+
+# ---------------------------------------------------------------------------
+# PITC — literal (theorem oracle)
+# ---------------------------------------------------------------------------
+
+def pitc_predict_literal(kfn, params, S, X_train, y_train, X_test,
+                         M: int) -> GPPosterior:
+    """Eqs. (9)-(10) built dense, Lambda from the M diagonal blocks of
+    Sigma_DD|S (noise included, as Sigma_xx' carries the delta term)."""
+    Kss_L = linalg.chol(kfn(params, S, S))
+    G_dd = _gamma(kfn, params, S, X_train, X_train, Kss_L)
+    G_ud = _gamma(kfn, params, S, X_test, X_train, Kss_L)
+
+    K_dd = cov.add_noise(kfn(params, X_train, X_train), params)
+    Sig_dd_s = K_dd - G_dd                     # Sigma_DD|S  (with noise)
+    Lam = jnp.zeros_like(Sig_dd_s)
+    for blk in _blocks(X_train.shape[0], M):
+        Lam = Lam.at[blk, blk].set(Sig_dd_s[blk, blk])
+
+    A = G_dd + Lam                             # Gamma_DD + Lambda
+    A_L = linalg.chol(A)
+    r = y_train[:, None]
+    mean = (G_ud @ linalg.chol_solve(A_L, r))[:, 0]
+    K_uu = kfn(params, X_test, X_test)
+    covm = K_uu - G_ud @ linalg.chol_solve(A_L, G_ud.T)
+    return GPPosterior(mean, covm)
+
+
+# ---------------------------------------------------------------------------
+# PIC — literal (theorem oracle)
+# ---------------------------------------------------------------------------
+
+def pic_predict_literal(kfn, params, S, X_train, y_train, X_test,
+                        M: int) -> GPPosterior:
+    """Eqs. (15)-(18): Gamma~ replaces the (U_i, D_i) blocks of Gamma_UD with
+    the exact cross-covariance Sigma_{U_i D_i}."""
+    n, u = X_train.shape[0], X_test.shape[0]
+    Kss_L = linalg.chol(kfn(params, S, S))
+    G_dd = _gamma(kfn, params, S, X_train, X_train, Kss_L)
+    G_ud = _gamma(kfn, params, S, X_test, X_train, Kss_L)
+    K_ud = kfn(params, X_test, X_train)
+
+    K_dd = cov.add_noise(kfn(params, X_train, X_train), params)
+    Sig_dd_s = K_dd - G_dd
+    Lam = jnp.zeros_like(Sig_dd_s)
+    d_blocks = _blocks(n, M)
+    u_blocks = _blocks(u, M)
+    Gt_ud = G_ud
+    for db, ub in zip(d_blocks, u_blocks):
+        Lam = Lam.at[db, db].set(Sig_dd_s[db, db])
+        Gt_ud = Gt_ud.at[ub, db].set(K_ud[ub, db])   # eq. (18), i = m branch
+
+    A_L = linalg.chol(G_dd + Lam)
+    mean = (Gt_ud @ linalg.chol_solve(A_L, y_train[:, None]))[:, 0]
+    K_uu = kfn(params, X_test, X_test)
+    covm = K_uu - Gt_ud @ linalg.chol_solve(A_L, Gt_ud.T)
+    return GPPosterior(mean, covm)
+
+
+# ---------------------------------------------------------------------------
+# Efficient centralized PITC/PIC — block loop on one machine.
+# Same math as the parallel methods but sequential: this is what the paper
+# times as "PITC"/"PIC" when reporting speedups of pPITC/pPIC.
+# ---------------------------------------------------------------------------
+
+def _local_summaries(kfn, params, S, Xb, yb):
+    """Per-block (3)-(4) restricted to B=B'=S, plus pieces reused by PIC.
+
+    Xb: (M, b, d) stacked blocks; returns stacked summaries.
+    """
+    Kss = kfn(params, S, S)
+    Kss_L = linalg.chol(Kss)
+
+    def one(Xm, ym):
+        Ksd = kfn(params, S, Xm)                       # (s, b)
+        V = linalg.tri_solve(Kss_L, Ksd)               # Kss^{-1/2} K_SD_m
+        Kdd = cov.add_noise(kfn(params, Xm, Xm), params)
+        C = Kdd - V.T @ V                              # Sigma_DmDm|S
+        C_L = linalg.chol(C)
+        W = linalg.chol_solve(C_L, Ksd.T)              # C^{-1} K_DmS  (b, s)
+        ydot = Ksd @ linalg.chol_solve(C_L, ym[:, None])[:, 0]   # (s,)
+        Sdot = Ksd @ W                                 # (s, s)
+        return ydot, Sdot
+
+    return Kss, Kss_L, jax.vmap(one)(Xb, yb)
+
+
+def _stack_blocks(X, y, M):
+    n, d = X.shape
+    b = n // M
+    return X.reshape(M, b, d), y.reshape(M, b)
+
+
+def pitc_predict_blockwise(kfn, params, S, X_train, y_train, X_test,
+                           M: int) -> GPPosterior:
+    Xb, yb = _stack_blocks(X_train, y_train, M)
+    Kss, Kss_L, (ydots, Sdots) = _local_summaries(kfn, params, S, Xb, yb)
+    ydd = jnp.sum(ydots, axis=0)                       # eq. (5)
+    Sdd = Kss + jnp.sum(Sdots, axis=0)                 # eq. (6)
+    Sdd_L = linalg.chol(Sdd)
+
+    Kus = kfn(params, X_test, S)
+    mean = Kus @ linalg.chol_solve(Sdd_L, ydd[:, None])[:, 0]      # eq. (7)
+    K_uu = kfn(params, X_test, X_test)
+    covm = K_uu - Kus @ (linalg.chol_solve(Kss_L, Kus.T)
+                         - linalg.chol_solve(Sdd_L, Kus.T))        # eq. (8)
+    return GPPosterior(mean, covm)
+
+
+def pic_predict_blockwise(kfn, params, S, X_train, y_train, X_test,
+                          M: int) -> GPPosterior:
+    """Efficient centralized PIC: summary term + per-block local correction.
+
+    Matches eqs. (12)-(14) computed sequentially over blocks; the equivalence
+    test checks it against pic_predict_literal.
+    """
+    n, u = X_train.shape[0], X_test.shape[0]
+    Xb, yb = _stack_blocks(X_train, y_train, M)
+    Ub = X_test.reshape(M, u // M, -1)
+    Kss, Kss_L, (ydots, Sdots) = _local_summaries(kfn, params, S, Xb, yb)
+    ydd = jnp.sum(ydots, axis=0)
+    Sdd = Kss + jnp.sum(Sdots, axis=0)
+    Sdd_L = linalg.chol(Sdd)
+
+    def one(Xm, ym, Um, ydot_m):
+        Ksd = kfn(params, S, Xm)
+        V = linalg.tri_solve(Kss_L, Ksd)
+        Kdd = cov.add_noise(kfn(params, Xm, Xm), params)
+        C_L = linalg.chol(Kdd - V.T @ V)               # Sigma_DmDm|S
+        Kud = kfn(params, Um, Xm)                      # Sigma_UmDm
+        Kus = kfn(params, Um, S)
+        W = linalg.chol_solve(C_L, Kud.T)              # C^{-1} K_DmUm
+        ydot_u = Kud @ linalg.chol_solve(C_L, ym[:, None])[:, 0]   # ydot_{U_m}
+        Sdot_su = Ksd @ W                              # Sigma-dot_{S U_m}
+        Sdot_uu = Kud @ W                              # Sigma-dot_{U_m U_m}
+        # eq. (14): Phi_{U_m S}
+        Sdot_ss = Ksd @ linalg.chol_solve(C_L, Ksd.T)
+        Phi = Kus + Kus @ linalg.chol_solve(Kss_L, Sdot_ss) - Sdot_su.T
+        # eq. (12)
+        mean = (Phi @ linalg.chol_solve(Sdd_L, ydd[:, None])[:, 0]
+                - Kus @ linalg.chol_solve(Kss_L, ydot_m[:, None])[:, 0]
+                + ydot_u)
+        # eq. (13). NB the published rendering drops the Phi Sdd^{-1} Phi^T
+        # term; re-derived from Thm 2 (Woodbury on Gamma_DD + Lambda):
+        #   Sigma+_mm = K_uu - Phi Kss^{-1} K_su + Phi Sdd^{-1} Phi^T
+        #               + K_us Kss^{-1} Sdot_su - Sdot_uu
+        Kuu = kfn(params, Um, Um)
+        covm = Kuu - (Phi @ linalg.chol_solve(Kss_L, Kus.T)
+                      - Phi @ linalg.chol_solve(Sdd_L, Phi.T)
+                      - Kus @ linalg.chol_solve(Kss_L, Sdot_su)) - Sdot_uu
+        return mean, covm
+
+    means, covs = jax.vmap(one)(Xb, yb, Ub, ydots)
+    mean = means.reshape(u)
+    covm = jax.scipy.linalg.block_diag(*[covs[m] for m in range(M)])
+    return GPPosterior(mean, covm)

@@ -1,0 +1,78 @@
+"""pPIC — parallel PIC approximation of FGP (paper Sec. 3, Def. 5, Thm. 2).
+
+Extends pPITC with the worker-local correction: machine m blends the global
+summary with exact covariance against its own block (eqs. 12-14), recovering
+centralized PIC (Snelson 2007) exactly.
+
+NB eq. (13) as printed drops a `Phi Sdd^{-1} Phi^T` term; the form implemented
+here is re-derived from Theorem 2 (see core/pitc.py) and verified against the
+literal PIC oracle in tests/test_equivalence.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov
+from repro.core import linalg
+from repro.core.ppitc import (GlobalSummary, LocalSummary, ParallelPosterior,
+                              global_summary, local_summary)
+from repro.parallel.runner import Runner
+
+
+def machine_step(kfn, params, S, Xm, ym, Um, *, axis_name):
+    """Full pPIC per-machine program: steps 2-4 with local correction."""
+    Kss_L = linalg.chol(kfn(params, S, S))
+    local, (Ksd, C_L) = local_summary(kfn, params, S, Kss_L, Xm, ym)
+    glob = global_summary(kfn, params, S, local, axis_name)
+    return predict_from_summary(kfn, params, S, Kss_L, local, glob,
+                                Xm, ym, Um, Ksd=Ksd, C_L=C_L)
+
+
+def predict_from_summary(kfn, params, S, Kss_L, local: LocalSummary,
+                         glob: GlobalSummary, Xm, ym, Um, *, Ksd=None,
+                         C_L=None):
+    """Eqs. (12)-(14). ``Ksd``/``C_L`` are reusable from local_summary."""
+    if Ksd is None:
+        Ksd = kfn(params, S, Xm)
+        V = linalg.tri_solve(Kss_L, Ksd)
+        Kdd = cov.add_noise(kfn(params, Xm, Xm), params)
+        C_L = linalg.chol(Kdd - V.T @ V)
+
+    Sdd_L = linalg.chol(glob.Sdd)
+    Kus = kfn(params, Um, S)
+    Kud = kfn(params, Um, Xm)                          # Sigma_{U_m D_m}
+
+    Wy = linalg.chol_solve(C_L, ym[:, None])[:, 0]     # C^{-1} y_m
+    ydot_u = Kud @ Wy                                  # y-dot_{U_m}^m
+    Wd = linalg.chol_solve(C_L, Kud.T)                 # C^{-1} K_{D_m U_m}
+    Sdot_su = Ksd @ Wd                                 # Sigma-dot_{S U_m}^m
+    Sdot_uu = Kud @ Wd                                 # Sigma-dot_{U_m U_m}^m
+
+    # eq. (14): Phi_{U_m S} = K_US + K_US Kss^{-1} Sdot_SS - Sdot_US
+    Phi = Kus + Kus @ linalg.chol_solve(Kss_L, local.Sdot) - Sdot_su.T
+
+    # eq. (12)
+    mean = (Phi @ linalg.chol_solve(Sdd_L, glob.ydd[:, None])[:, 0]
+            - Kus @ linalg.chol_solve(Kss_L, local.ydot[:, None])[:, 0]
+            + ydot_u)
+
+    # eq. (13), re-derived (Thm 2):
+    Kuu = kfn(params, Um, Um)
+    covm = Kuu - (Phi @ linalg.chol_solve(Kss_L, Kus.T)
+                  - Phi @ linalg.chol_solve(Sdd_L, Phi.T)
+                  - Kus @ linalg.chol_solve(Kss_L, Sdot_su)) - Sdot_uu
+    return mean, covm
+
+
+def predict(kfn, params, S, X, y, U, runner: Runner) -> ParallelPosterior:
+    """End-to-end pPIC over a Runner.
+
+    For best accuracy X/U should be co-clustered first
+    (core/clustering.py — Remark 2 after Def. 5).
+    """
+    Xb, yb, Ub = (runner.shard_blocks(a) for a in (X, y, U))
+    fn = lambda Xm, ym, Um, params, S: machine_step(
+        kfn, params, S, Xm, ym, Um, axis_name=runner.axis_name)
+    means, covs = runner.map(fn, (Xb, yb, Ub), (params, S))
+    return ParallelPosterior(runner.unshard(means), covs)

@@ -1,0 +1,122 @@
+"""pPITC — parallel PITC approximation of FGP (paper Sec. 3, Defs. 1-4).
+
+Per-machine program (runs under VmapRunner or ShardMapRunner):
+
+  Step 1  data arrives block-sharded: machine m holds (D_m, y_{D_m});
+  Step 2  local summary  (eqs. 3-4)  — O((|D|/M)^3) local cholesky;
+  Step 3  global summary (eqs. 5-6)  — ONE all-reduce of an |S|-vector and an
+          |S|x|S| matrix (lax.psum == the master-free assimilation; comm
+          O(|S|^2 log M) as in Table 1);
+  Step 4  each machine predicts its U_m slice (eqs. 7-8) locally.
+
+Zero prior mean assumed (data pipeline centers y).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov
+from repro.core import linalg
+from repro.parallel.runner import Runner
+
+
+class LocalSummary(NamedTuple):
+    """(eqs. 3-4) restricted to B = B' = S — what crosses the network."""
+    ydot: jax.Array   # (s,)    y-dot_S^m
+    Sdot: jax.Array   # (s, s)  Sigma-dot_SS^m
+
+
+class GlobalSummary(NamedTuple):
+    """(eqs. 5-6)."""
+    ydd: jax.Array    # (s,)
+    Sdd: jax.Array    # (s, s)  ( = K_SS + sum_m Sdot^m )
+
+
+class ParallelPosterior(NamedTuple):
+    """Block posterior: machine m owns mean/cov of its U_m slice."""
+    mean: jax.Array      # (u,)
+    blocks: jax.Array    # (M, u/M, u/M) diagonal covariance blocks
+
+    @property
+    def var(self) -> jax.Array:
+        M, b, _ = self.blocks.shape
+        return jax.vmap(jnp.diag)(self.blocks).reshape(M * b)
+
+    @property
+    def cov(self) -> jax.Array:   # dense block-diagonal view (small U only)
+        return jax.scipy.linalg.block_diag(
+            *[self.blocks[m] for m in range(self.blocks.shape[0])])
+
+
+def local_summary(kfn, params, S, Kss_L, Xm, ym):
+    """Eqs. (3)-(4) with B=B'=S. Also returns the pieces pPIC reuses."""
+    Ksd = kfn(params, S, Xm)                          # (s, b)
+    V = linalg.tri_solve(Kss_L, Ksd)                  # Kss^{-1/2} K_SD_m
+    Kdd = cov.add_noise(kfn(params, Xm, Xm), params)
+    C_L = linalg.chol(Kdd - V.T @ V)                  # chol Sigma_{DmDm|S}
+    W = linalg.chol_solve(C_L, ym[:, None])[:, 0]     # C^{-1}(y - mu)
+    ydot = Ksd @ W
+    Sdot = Ksd @ linalg.chol_solve(C_L, Ksd.T)
+    return LocalSummary(ydot, Sdot), (Ksd, C_L)
+
+
+def global_summary(kfn, params, S, local: LocalSummary,
+                   axis_name) -> GlobalSummary:
+    """Eqs. (5)-(6): the single all-reduce of the algorithm."""
+    Kss = kfn(params, S, S)
+    ydd = jax.lax.psum(local.ydot, axis_name)
+    Sdd = Kss + jax.lax.psum(local.Sdot, axis_name)
+    return GlobalSummary(ydd, Sdd)
+
+
+def machine_step(kfn, params, S, Xm, ym, Um, *, axis_name):
+    """Full pPITC per-machine program: steps 2-4. Returns (mean_m, cov_m)."""
+    Kss_L = linalg.chol(kfn(params, S, S))
+    local, _ = local_summary(kfn, params, S, Kss_L, Xm, ym)
+    glob = global_summary(kfn, params, S, local, axis_name)
+    return predict_from_summary(kfn, params, S, Kss_L, glob, Um)
+
+
+def predict_from_summary(kfn, params, S, Kss_L, glob: GlobalSummary, Um):
+    """Eqs. (7)-(8) — purely local given the global summary."""
+    Sdd_L = linalg.chol(glob.Sdd)
+    Kus = kfn(params, Um, S)
+    mean = Kus @ linalg.chol_solve(Sdd_L, glob.ydd[:, None])[:, 0]
+    Kuu = kfn(params, Um, Um)
+    covm = Kuu - Kus @ (linalg.chol_solve(Kss_L, Kus.T)
+                        - linalg.chol_solve(Sdd_L, Kus.T))
+    return mean, covm
+
+
+def predict(kfn, params, S, X, y, U, runner: Runner) -> ParallelPosterior:
+    """End-to-end pPITC over a Runner (vmap simulation or shard_map)."""
+    Xb, yb, Ub = runner.shard_blocks(X), runner.shard_blocks(y), \
+        runner.shard_blocks(U)
+    fn = lambda Xm, ym, Um, params, S: machine_step(
+        kfn, params, S, Xm, ym, Um, axis_name=runner.axis_name)
+    means, covs = runner.map(fn, (Xb, yb, Ub), (params, S))
+    return ParallelPosterior(runner.unshard(means), covs)
+
+
+def summaries(kfn, params, S, X, y, runner: Runner):
+    """Stacked per-machine local summaries + the global summary.
+
+    Exposed for online/incremental learning (Sec. 5.2) and fault tolerance:
+    the global summary is an algebraic sum, so machine loss/addition is a
+    subtraction/addition of cached LocalSummary terms (runtime/fault.py).
+    """
+    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+
+    def fn(Xm, ym, params, S):
+        Kss_L = linalg.chol(kfn(params, S, S))
+        local, _ = local_summary(kfn, params, S, Kss_L, Xm, ym)
+        return local
+
+    locals_ = runner.map(fn, (Xb, yb), (params, S))
+    Kss = kfn(params, S, S)
+    glob = GlobalSummary(jnp.sum(locals_.ydot, 0),
+                         Kss + jnp.sum(locals_.Sdot, 0))
+    return locals_, glob

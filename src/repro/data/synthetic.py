@@ -1,0 +1,83 @@
+"""Synthetic datasets mirroring the paper's two domains + LM token streams.
+
+The real AIMPEAK/SARCOS data are not vendored; these generators reproduce
+their statistical shape (dimensions, scale, noise levels quoted in Sec. 6) so
+the benchmark harness exercises identical matrix sizes and the predictive-
+quality curves are qualitatively comparable. Large-n GP draws use random
+Fourier features (exact O(n^3) sampling is the very thing the paper avoids).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Dataset(NamedTuple):
+    X: jax.Array
+    y: jax.Array
+    X_test: jax.Array
+    y_test: jax.Array
+    mean_y: jax.Array
+    std_y: jax.Array
+
+
+def rff_function(key, d: int, *, n_features: int = 512,
+                 lengthscale=1.0, signal: float = 1.0):
+    """Random smooth function ~ GP(0, SE kernel) via random Fourier features."""
+    kw, kb, ka = jax.random.split(key, 3)
+    ls = jnp.broadcast_to(jnp.asarray(lengthscale, jnp.float32), (d,))
+    W = jax.random.normal(kw, (n_features, d)) / ls[None, :]
+    b = jax.random.uniform(kb, (n_features,), maxval=2 * math.pi)
+    a = jax.random.normal(ka, (n_features,)) * signal
+
+    def f(X):
+        phi = jnp.cos(X @ W.T + b) * math.sqrt(2.0 / n_features)
+        return phi @ a
+
+    return f
+
+
+def _make(key, n, n_test, d, *, lengthscale, noise, out_mean, out_std):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    f = rff_function(k1, d, lengthscale=lengthscale)
+    X = jax.random.uniform(k2, (n, d), minval=-2.0, maxval=2.0)
+    Xt = jax.random.uniform(k3, (n_test, d), minval=-2.0, maxval=2.0)
+    fy = f(jnp.concatenate([X, Xt]))
+    fy = (fy - fy.mean()) / (fy.std() + 1e-9)
+    eps = noise * jax.random.normal(k4, (n + n_test,))
+    y_all = out_mean + out_std * (fy + eps)
+    return Dataset(X, y_all[:n], Xt, y_all[n:],
+                   jnp.asarray(out_mean), jnp.asarray(out_std))
+
+
+def aimpeak_like(key, n: int = 8000, n_test: int = 800) -> Dataset:
+    """Traffic-speed-like: 5-d inputs (length, lanes, limit, direction,
+    time), mean 49.5 km/h, sd 21.7 (paper Sec. 6)."""
+    return _make(key, n, n_test, 5, lengthscale=1.2, noise=0.3,
+                 out_mean=49.5, out_std=21.7)
+
+
+def sarcos_like(key, n: int = 8000, n_test: int = 800) -> Dataset:
+    """Robot-arm inverse-dynamics-like: 21-d inputs (7 pos + 7 vel + 7 acc),
+    torque mean 13.7, sd 20.5 (paper Sec. 6)."""
+    # lengthscale ~ sqrt(d) keeps typical pairwise correlations O(1)
+    return _make(key, n, n_test, 21, lengthscale=4.5, noise=0.25,
+                 out_mean=13.7, out_std=20.5)
+
+
+def standardize(ds: Dataset) -> Dataset:
+    """Center/scale outputs (the GP core assumes zero prior mean)."""
+    return Dataset(ds.X, (ds.y - ds.mean_y) / ds.std_y, ds.X_test,
+                   (ds.y_test - ds.mean_y) / ds.std_y, ds.mean_y, ds.std_y)
+
+
+def lm_tokens(key, *, batch: int, seq: int, vocab: int,
+              zipf_a: float = 1.2):
+    """Zipf-distributed synthetic token stream (batch, seq+1) — realistic
+    rank-frequency profile so embedding-gather patterns aren't uniform."""
+    u = jax.random.uniform(key, (batch, seq + 1), minval=1e-6, maxval=1.0)
+    ranks = jnp.floor(u ** (-1.0 / (zipf_a - 1.0))).astype(jnp.int32)
+    return jnp.clip(ranks, 0, vocab - 1)

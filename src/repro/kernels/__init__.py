@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots, each with an
+ops.py jit wrapper and a ref.py pure-jnp oracle (validated in interpret
+mode on CPU):
+
+  rbf/        fused pairwise-sqdist + exp covariance (the paper's local-
+              summary hot spot: K_SD, K_DD blocks, K_UD)
+  attention/  flash attention (GQA / causal / sliding-window) + the chunked
+              O(T*(W+c)) windowed reference path
+  ssd/        Mamba-2 SSD intra-chunk block (decay-masked chained matmuls)
+"""

@@ -1,0 +1,107 @@
+"""Pallas TPU flash attention (forward) with GQA, causal and sliding-window.
+
+TPU adaptation notes (vs. the CUDA flash-attention blueprint):
+  * no warp-level shuffles — the online-softmax running (max, sum) state lives
+    in VMEM scratch per (block_q, D) tile; block reductions are plain VPU ops;
+  * tiles are MXU-aligned: block_q x head_dim and block_k x head_dim with
+    head_dim padded to 128 by ops.py;
+  * the KV loop is the innermost grid dimension so the output tile stays
+    resident in VMEM across KV steps (revisiting semantics), accumulated in
+    f32;
+  * causal/window handling is per-tile masking with explicit zeroing of
+    masked probabilities (avoids the exp(-inf - -inf) = 1 trap on tiles that
+    are fully masked).
+
+Layout: q (BH, Tq, D) flattened outside; grid (BH, Tq/bq, Tk/bk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(params_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref,
+                  acc_ref, *, block_q: int, block_k: int, causal: bool,
+                  window: int | None):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+    num_kv = pl.num_programs(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    scale = params_ref[0]
+    q_offset = params_ref[1].astype(jnp.int32)
+
+    q = q_ref[0].astype(jnp.float32)                   # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                   # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = q_idx * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset
+    kpos = kv_idx * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (bq, 1)
+    m_cur = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+    alpha = jnp.exp(m_prev - m_cur)                     # (bq, 1); -inf-safe: 1
+    p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)        # (bq, bk)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)[:, None]
+    m_ref[...] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kv_idx == num_kv - 1)
+    def _finish():
+        out_ref[0] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal",
+                                             "window", "interpret"))
+def flash_attention_flat(q, k, v, params, *, block_q: int = 128,
+                         block_k: int = 128, causal: bool = True,
+                         window: int | None = None,
+                         interpret: bool = False):
+    """q: (BH, Tq, D), k/v: (BH, Tk, D) — GQA head-broadcast done by ops.py.
+    params: (2,) f32 [scale, q_offset]."""
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    grid = (BH, Tq // block_q, Tk // block_k)
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # params
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, D), jnp.float32),   # f32 accumulator
+        ],
+        interpret=interpret,
+    )(params, q, k, v)

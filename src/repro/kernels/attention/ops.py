@@ -1,0 +1,74 @@
+"""jit'd public wrapper for flash attention.
+
+Responsibilities: GQA head broadcast, (B, H, T, D) <-> (BH, T, D) flattening,
+head-dim padding to 128 lanes, sequence padding to block multiples, and
+implementation routing ("auto" uses Pallas on TPU, the jnp reference
+elsewhere; "pallas_interpret" validates the kernel body on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import ref
+from repro.kernels.attention.flash import flash_attention_flat
+
+_LANE = 128
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None, q_offset: int = 0,
+              impl: str = "auto", block_q: int = 128, block_k: int = 128):
+    """Multi-head attention with GQA. q: (B,Hq,Tq,D); k,v: (B,Hkv,Tk,D)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        Tq, Tk = q.shape[2], k.shape[2]
+        # §Perf: sliding-window sequences use the chunked O(T*(W+c)) path
+        # when it saves >=2x over the masked-full computation
+        if (causal and window is not None and Tq == Tk and q_offset == 0
+                and Tq >= 2 * window and Tq % min(window, 512) == 0):
+            return ref.attention_windowed_chunked(q, k, v, window=window,
+                                                  scale=scale)
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             scale=scale, q_offset=q_offset)
+
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    # GQA: repeat kv heads to match q heads (VMEM tiles are per flattened
+    # head, so the broadcast costs HBM reads, not extra FLOPs per tile pair)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=1)
+        v = jnp.repeat(v, G, axis=1)
+
+    qf = _pad_axis(_pad_axis(q.reshape(B * Hq, Tq, D), 2, _LANE), 1, block_q)
+    kf = _pad_axis(_pad_axis(k.reshape(B * Hq, Tk, D), 2, _LANE), 1, block_k)
+    vf = _pad_axis(_pad_axis(v.reshape(B * Hq, Tk, D), 2, _LANE), 1, block_k)
+    # padded keys sit at positions >= Tk; causal masking hides them iff
+    # qpos < Tk, which holds for real rows. For non-causal, mask via window
+    # trick is not available — assert instead.
+    assert causal or kf.shape[1] == Tk, \
+        "non-causal flash requires Tk % block_k == 0"
+
+    params = jnp.stack([jnp.asarray(scale, jnp.float32),
+                        jnp.asarray(q_offset, jnp.float32)])
+    out = flash_attention_flat(qf, kf, vf, params, block_q=block_q,
+                               block_k=block_k, causal=causal, window=window,
+                               interpret=(impl == "pallas_interpret"))
+    return out[:, :Tq, :D].reshape(B, Hq, Tq, D)

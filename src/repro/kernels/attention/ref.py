@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding-window).
+
+``attention_windowed_chunked`` is the FLOP-efficient sliding-window path
+(§Perf): each query chunk only touches its (window + chunk)-wide key span,
+so cost is O(T·(W+c)·D) instead of the masked-full O(T^2·D). Exact vs
+``attention`` (tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_windowed_chunked(q, k, v, *, window: int,
+                               scale: float | None = None,
+                               q_offset: int = 0,
+                               chunk: int | None = None):
+    """Sliding-window causal attention via fixed-span key slices.
+
+    q: (B, Hq, T, D); k, v: (B, Hkv, T, D), GQA broadcast done here.
+    Requires T % chunk == 0 (caller pads); chunk defaults to min(window, 512).
+    """
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    c = chunk or min(window, 512)
+    c = min(c, T)
+    if T % c:
+        c = T  # fallback: single chunk
+    nc = T // c
+    span = window + c   # keys covering [qpos - window + 1, qpos] for a chunk
+
+    kf = jnp.pad(k.astype(jnp.float32),
+                 ((0, 0), (0, 0), (window, 0), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32),
+                 ((0, 0), (0, 0), (window, 0), (0, 0)))
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, T, D)
+
+    def one_chunk(i):
+        qs = jax.lax.dynamic_slice_in_dim(qf, i * c, c, axis=3)
+        ks = jax.lax.dynamic_slice_in_dim(kf, i * c, span, axis=2)
+        vs = jax.lax.dynamic_slice_in_dim(vf, i * c, span, axis=2)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qs, ks) * scale
+        qpos = i * c + jnp.arange(c) + q_offset
+        kpos = i * c - window + jnp.arange(span) + q_offset
+        mask = ((kpos[None, :] <= qpos[:, None])
+                & (kpos[None, :] > qpos[:, None] - window)
+                & (kpos[None, :] >= q_offset))   # left-pad region invalid
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", probs, vs)
+
+    out = jax.lax.map(one_chunk, jnp.arange(nc))      # (nc, B, Hkv, G, c, D)
+    out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, G, T, D)
+    return out.reshape(B, Hq, T, D).astype(q.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None,
+              q_offset: int = 0) -> jax.Array:
+    """Reference attention.
+
+    q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D) with Hq % Hkv == 0 (GQA).
+    ``window``: sliding-window size (keys within [i - window + 1, i]).
+    ``q_offset``: absolute position of q[0] (decode: Tq=1, q_offset=cache_len).
+    Softmax in float32.
+    """
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Tq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+
+    qpos = jnp.arange(Tq) + q_offset
+    kpos = jnp.arange(k.shape[2])
+    mask = jnp.ones((Tq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(B, Hq, Tq, D).astype(q.dtype)

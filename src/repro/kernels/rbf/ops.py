@@ -1,0 +1,67 @@
+"""jit'd public wrapper for the fused RBF covariance kernel.
+
+Handles padding (rows to block multiples, feature dim to a 128 multiple for
+MXU alignment), VMEM-aware block-size selection, and the CPU fallback
+(interpret mode executes the kernel body in Python — correct but slow, so the
+wrapper only routes through Pallas when asked or when on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rbf import ref
+from repro.kernels.rbf.rbf import rbf_pallas
+
+_LANE = 128
+_VMEM_BUDGET = 8 * 1024 * 1024   # bytes, conservative half of v5e VMEM
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pick_blocks(n: int, m: int, d_padded: int,
+                itemsize: int = 4) -> tuple[int, int]:
+    """Largest hardware-aligned (block_q, block_k) whose tile working set
+    (two input tiles + f32 output tile) fits the VMEM budget."""
+    for b in (512, 256, 128):
+        bq, bk = min(b, n), min(b, m)
+        bytes_needed = (bq + bk) * d_padded * itemsize + bq * bk * 4
+        if bytes_needed <= _VMEM_BUDGET:
+            return max(bq, 8), max(bk, _LANE)
+    return 8, _LANE
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def rbf_covariance(Xq: jax.Array, Xk: jax.Array, sig2, *,
+                   impl: str = "auto") -> jax.Array:
+    """sig2 * exp(-0.5 ||x-z||^2) over pre-scaled inputs; (n,d),(m,d)->(n,m).
+
+    impl: "auto" (pallas on TPU, jnp elsewhere), "pallas" (compiled),
+          "pallas_interpret" (Python-executed kernel body — for validation),
+          "jnp" (reference).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        return ref.rbf_covariance(Xq, Xk, sig2)
+
+    n, d = Xq.shape
+    m = Xk.shape[0]
+    Xq_p = _pad_to(Xq, 1, _LANE)
+    Xk_p = _pad_to(Xk, 1, _LANE)
+    bq, bk = pick_blocks(n, m, Xq_p.shape[1], Xq.dtype.itemsize)
+    Xq_p = _pad_to(Xq_p, 0, bq)
+    Xk_p = _pad_to(Xk_p, 0, bk)
+    out = rbf_pallas(Xq_p, Xk_p, sig2, block_q=bq, block_k=bk,
+                     interpret=(impl == "pallas_interpret"))
+    return out[:n, :m]

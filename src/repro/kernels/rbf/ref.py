@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused RBF covariance kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rbf_covariance(Xq: jax.Array, Xk: jax.Array, sig2) -> jax.Array:
+    """sig2 * exp(-0.5 ||x - z||^2) for pre-lengthscale-scaled inputs.
+
+    Xq: (n, d), Xk: (m, d) -> (n, m). Accumulates in float32 regardless of
+    input dtype (matches the kernel's MXU accumulation).
+    """
+    Xq32 = Xq.astype(jnp.float32)
+    Xk32 = Xk.astype(jnp.float32)
+    q2 = jnp.sum(Xq32 * Xq32, axis=-1)[:, None]
+    k2 = jnp.sum(Xk32 * Xk32, axis=-1)[None, :]
+    cross = Xq32 @ Xk32.T
+    d2 = jnp.maximum(q2 + k2 - 2.0 * cross, 0.0)
+    out = jnp.asarray(sig2, jnp.float32) * jnp.exp(-0.5 * d2)
+    return out.astype(Xq.dtype)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def intra_chunk(xdt, dA, Bc, Cc):
+    """One (batch*chunk, head) tile of the SSD algorithm.
+
+    xdt: (cs, P)  dt-weighted inputs for this head
+    dA:  (cs,)    log-decay increments for this head
+    Bc:  (cs, N)  input projections (shared across heads)
+    Cc:  (cs, N)  output projections
+
+    Returns:
+      Y_diag (cs, P) — intra-chunk output
+      S      (P, N)  — chunk state contribution (decayed to chunk end)
+      cum    (cs,)   — cumulative log-decay (host uses it for inter-chunk)
+    """
+    cs = dA.shape[0]
+    cum = jnp.cumsum(dA)
+    L = cum[:, None] - cum[None, :]
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    L = jnp.where(mask, jnp.exp(jnp.where(mask, L, 0.0)), 0.0)
+    G = Cc @ Bc.T                                 # (cs, cs)
+    Y_diag = (G * L) @ xdt                        # (cs, P)
+    decay_end = jnp.exp(cum[-1] - cum)            # (cs,)
+    S = xdt.T @ (Bc * decay_end[:, None])         # (P, N)
+    return Y_diag, S, cum

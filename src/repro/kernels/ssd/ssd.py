@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: SSD intra-chunk block (Mamba-2 hot spot).
+
+The SSD algorithm's inner loop is three chained matmuls per (batch-chunk,
+head) tile — C_c B_c^T (MXU), a decay-mask elementwise (VPU), and the
+(cs x cs)(cs x P) product (MXU) — plus the decayed state outer product.
+The CUDA reference fuses these with warp-level scans; the TPU-native
+adaptation keeps the whole tile (cs<=256, N=128, P<=128: ~0.5 MB) resident
+in VMEM and lets the MXU run the chained products, with the cumulative
+log-decay computed as a VPU cumsum (no cross-lane shuffles needed).
+
+The sequential inter-chunk recurrence stays in JAX (ops.py) — it is O(nc)
+tiny matvecs and XLA pipelines it behind the next chunk's kernel work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(xdt_ref, dA_ref, b_ref, c_ref, y_ref, s_ref, cum_ref):
+    xdt = xdt_ref[0, :, 0, :].astype(jnp.float32)      # (cs, P)
+    dA = dA_ref[0, 0, :].astype(jnp.float32)           # (cs,)
+    Bc = b_ref[0].astype(jnp.float32)                  # (cs, N)
+    Cc = c_ref[0].astype(jnp.float32)                  # (cs, N)
+    cs = dA.shape[0]
+
+    cum = jnp.cumsum(dA)                               # VPU scan
+    L = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    L = jnp.where(tri, jnp.exp(jnp.where(tri, L, 0.0)), 0.0)
+
+    G = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    Y = jax.lax.dot_general(G * L, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    decay_end = jnp.exp(cum[-1] - cum)
+    S = jax.lax.dot_general(xdt, Bc * decay_end[:, None],
+                            (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = Y.astype(y_ref.dtype)
+    s_ref[0, 0] = S.astype(s_ref.dtype)
+    cum_ref[0, 0] = cum.astype(cum_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(xdt, dA, Bc, Cc, *, interpret: bool = False):
+    """xdt: (BC, cs, H, P); dA: (BC, H, cs); Bc/Cc: (BC, cs, N).
+    Returns Y_diag (BC, cs, H, P), S (BC, H, P, N), cum (BC, H, cs)."""
+    BC, cs, H, P = xdt.shape
+    N = Bc.shape[-1]
+    grid = (BC, H)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cs, 1, P), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, 1, cs), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((1, cs, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, cs, N), lambda i, h: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cs, 1, P), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, cs), lambda i, h: (i, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, cs, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((BC, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((BC, H, cs), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, dA, Bc, Cc)

@@ -1,0 +1,104 @@
+"""Sharded serving: batched single-token decode against KV/SSM caches.
+
+decode_32k: batch sharded over DP, KV heads over TP.
+long_500k:  batch=1 — the KV cache is sequence-sharded over DP (flash-decode
+layout); GSPMD lowers the softmax/PV contractions to all-reduces over the
+sequence shards.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.attention import KVCache
+from repro.models.ssm import SSMState, dims as ssm_dims
+from repro.parallel import sharding as shd
+
+
+def serve_state_specs(cfg: ModelConfig, mesh, *, batch: int):
+    """Mirror pytree of PartitionSpecs for a ServeState."""
+    plan, period, n_full, rest = tf._split_plan(cfg)
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H_ssm = d_inner // cfg.ssm_headdim if cfg.ssm_state else 1
+
+    def cache_specs(desc, stacked):
+        if desc.kind == "attn":
+            kv = shd.cache_spec(mesh, batch=batch, n_kv=cfg.n_kv_heads,
+                                seq=cfg.max_seq, stacked=stacked)
+            length = P(None) if stacked else P()
+            return KVCache(kv, kv, length)
+        s = shd.ssm_state_spec(mesh, batch=batch, n_heads=H_ssm,
+                               stacked=stacked)
+        dp = shd.dp_axes(mesh)
+        dpx = dp if len(dp) > 1 else (dp[0] if dp else None)
+        bshard = dpx if (batch > 1 and batch % max(
+            1, shd._size(mesh, dpx)) == 0) else None
+        conv = (P(None, bshard, None, None) if stacked
+                else P(bshard, None, None))
+        return SSMState(s, conv)
+
+    stack = tuple(cache_specs(cfg.layer_pattern[pos], True)
+                  for pos in range(period)) if n_full else ()
+    rest_s = tuple(cache_specs(d, False) for d in rest)
+    if not cfg.enc_dec:
+        return tf.ServeState(stack, rest_s, None, None)
+    # precomputed cross K/V (§Perf): (n_full, B, Hkv, Te, hd) per position
+    kvspec = shd.cache_spec(mesh, batch=batch, n_kv=cfg.n_kv_heads,
+                            seq=cfg.enc_seq, stacked=True)
+    kvspec_r = shd.cache_spec(mesh, batch=batch, n_kv=cfg.n_kv_heads,
+                              seq=cfg.enc_seq, stacked=False)
+    ckv = (tuple((kvspec, kvspec) for _ in range(period)) if n_full else (),
+           tuple((kvspec_r, kvspec_r) for _ in rest))
+    return tf.ServeState(stack, rest_s, None, ckv)
+
+
+def make_serve_step(cfg: ModelConfig, mesh, *, batch: int,
+                    attn_impl: str = "jnp", donate: bool = True):
+    """Returns jitted decode step: (params, token, state) -> (logits, state)."""
+    def step(params, token, state):
+        return tf.decode_step(params, token, state, cfg)
+
+    def jitted(params_like):
+        pspec = shd.param_specs(params_like, mesh)
+        sspec = serve_state_specs(cfg, mesh, batch=batch)
+        bspec = shd.batch_spec(mesh)
+        return jax.jit(
+            step,
+            in_shardings=(shd.shardings(pspec, mesh),
+                          NamedSharding(mesh, bspec),
+                          shd.shardings(sspec, mesh)),
+            out_shardings=(NamedSharding(
+                mesh, shd.logits_spec(mesh, batch=batch, vocab=cfg.vocab_padded)),
+                           shd.shardings(sspec, mesh)),
+            donate_argnums=(2,) if donate else ())
+
+    return step, jitted
+
+
+def prefill_then_decode(params, tokens, cfg: ModelConfig, *, max_len: int,
+                        n_decode: int, attn_impl: str = "jnp",
+                        temperature: float = 0.0, key=None):
+    """Reference generation loop (examples/serving): sequential prefill via
+    decode steps (simple, exact), then greedy/temperature sampling."""
+    B, T = tokens.shape
+    state = tf.init_serve(cfg, B, max_len)
+    logits = None
+    for t in range(T):
+        logits, state = tf.decode_step(params, tokens[:, t:t + 1], state, cfg)
+    out = [tokens]
+    cur = None
+    for i in range(n_decode):
+        if temperature > 0.0 and key is not None:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(
+                sub, logits[:, -1] / temperature)[:, None]
+        else:
+            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(cur)
+        logits, state = tf.decode_step(params, cur, state, cfg)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,38 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell —
+weak-type-correct, shardable, zero device allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, ShapeSpec
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, T = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        # frontend STUB: precomputed patch embeddings replace token embeds
+        specs["inputs_embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model),
+                                                      jnp.bfloat16)
+    if cfg.enc_dec:
+        # frontend STUB: precomputed audio frame embeddings
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                               jnp.bfloat16)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B = shape.global_batch
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train" or shape.kind == "prefill":
+        return train_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,135 @@
+"""Sharded training step builder (pjit/GSPMD path).
+
+Features: FSDP+TP param sharding (parallel/sharding.py), remat over the
+layer-period scan, microbatch gradient accumulation, optional int8+error-
+feedback gradient compression (numerics-sim under pjit), Adam(W) update,
+aux-loss logging. The returned step is jitted with explicit in/out shardings
+and donates the state.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.optim.adam import Adam, AdamState
+from repro.optim import compression
+from repro.parallel import sharding as shd
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    ef: Any                # compression.EFState | None
+    step: jax.Array
+
+
+class Metrics(NamedTuple):
+    loss: jax.Array
+    moe_loss: jax.Array
+    dropped: jax.Array
+    grad_norm: jax.Array
+
+
+def init_state(key, cfg: ModelConfig, opt: Adam, *,
+               compress: bool = False) -> TrainState:
+    params = tf.init_model(key, cfg)
+    ef = compression.init_ef(params) if compress else None
+    return TrainState(params, opt.init(params), ef,
+                      jnp.zeros((), jnp.int32))
+
+
+def state_specs(state: TrainState, mesh):
+    pspec = shd.param_specs(state.params, mesh)
+    ef = (compression.EFState(pspec) if state.ef is not None else None)
+    return TrainState(pspec, AdamState(P(), pspec, pspec), ef, P())
+
+
+def _loss(params, batch, cfg: ModelConfig, *, remat, remat_policy,
+          attn_impl):
+    return tf.lm_loss(
+        params, batch.get("tokens"), batch["labels"], cfg,
+        enc_kv=batch.get("enc_kv"),
+        inputs_embeds=batch.get("inputs_embeds"),
+        attn_impl=attn_impl, remat=remat, remat_policy=remat_policy)
+
+
+def make_train_step(cfg: ModelConfig, mesh, opt: Adam, *,
+                    microbatches: int = 1, remat: bool = True,
+                    remat_policy=None, compress: bool = False,
+                    attn_impl: str = "auto", donate: bool = True):
+    """Returns (train_step, jitted_builder). train_step(state, batch) runs
+    eagerly (CPU tests, mesh=None); jitted_builder(state) returns the
+    sharded/jitted version for the mesh."""
+
+    def loss_fn(params, batch):
+        if cfg.enc_dec and "frames" in batch:
+            enc_kv = tf.encode(params, batch["frames"], cfg,
+                               attn_impl=attn_impl)
+            batch = {**batch, "enc_kv": enc_kv}
+        return _loss(params, batch, cfg, remat=remat,
+                     remat_policy=remat_policy, attn_impl=attn_impl)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        if microbatches == 1:
+            (loss, aux), grads = grad_fn(state.params, batch)
+        else:
+            def mb_slice(b, i):
+                return jax.tree.map(
+                    lambda x: x.reshape((microbatches,
+                                         x.shape[0] // microbatches)
+                                        + x.shape[1:])[i], b)
+
+            def acc(carry, i):
+                g_acc, l_acc, m_acc, d_acc = carry
+                (l, a), g = grad_fn(state.params, mb_slice(batch, i))
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, m_acc + a.moe_loss,
+                        d_acc + a.dropped), None
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, loss, moe_l, drop), _ = jax.lax.scan(
+                acc, (zeros, 0.0, 0.0, 0.0), jnp.arange(microbatches))
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss, aux = loss * inv, tf.Aux(moe_l * inv, drop * inv)
+
+        ef = state.ef
+        if compress and ef is not None:
+            grads, ef = compression.compress_grads(grads, ef)
+
+        from repro.optim.adam import global_norm
+        gnorm = global_norm(grads)
+        params, opt_state = opt.update(grads, state.opt, state.params)
+        new_state = TrainState(params, opt_state, ef, state.step + 1)
+        return new_state, Metrics(loss, aux.moe_loss, aux.dropped, gnorm)
+
+    def jitted(state: TrainState):
+        bspec = shd.batch_spec(mesh)
+        sspec = state_specs(state, mesh)
+        bshape_spec = {k: bspec for k in _batch_keys(cfg)}
+        return jax.jit(
+            train_step,
+            in_shardings=(shd.shardings(sspec, mesh),
+                          shd.shardings(bshape_spec, mesh)),
+            out_shardings=(shd.shardings(sspec, mesh),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0,) if donate else ())
+
+    return train_step, jitted
+
+
+def _batch_keys(cfg: ModelConfig):
+    keys = ["tokens", "labels"]
+    if cfg.family == "vlm":
+        keys.append("inputs_embeds")
+    if cfg.enc_dec:
+        keys.append("frames")
+    return keys

@@ -1,0 +1,133 @@
+"""Shared transformer building blocks (pure functions + explicit params).
+
+Param trees use descriptive leaf names; parallel/sharding.py assigns
+PartitionSpecs by name convention (e.g. "*/w_in" -> shard d_ff on "model").
+All matmuls cast to the compute dtype (bf16 on TPU) with f32 params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    out = x32 * inv
+    if weight is not None:
+        out = out * (1.0 + weight.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    """Non-parametric when weight/bias are None (OLMo)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        out = out * weight.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def make_norm(cfg):
+    """Returns (init_fn(key) -> params|None, apply_fn(x, params))."""
+    if cfg.nonparametric_ln:
+        return (lambda key: None,
+                lambda x, p: layer_norm(x, None, None, cfg.norm_eps))
+    return (lambda key: jnp.zeros((cfg.d_model,), jnp.float32),
+            lambda x, p: rms_norm(x, p, cfg.norm_eps))
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, H, T, D); positions: (B, T) int."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                          # (D/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)           # (B, 1, T, D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections=(16, 24, 24)):
+    """Multimodal RoPE (Qwen2-VL): the D/2 frequency slots are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+    positions3: (B, 3, T). For pure text all three ids coincide, which makes
+    M-RoPE reduce to standard RoPE (verified in tests)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                          # (D/2,)
+    sec = jnp.cumsum(jnp.asarray((0,) + tuple(sections)))
+    slot = jnp.arange(D // 2)
+    which = jnp.clip(jnp.searchsorted(sec, slot, side="right") - 1, 0, 2)
+    pos = positions3.astype(jnp.float32)[:, which, :]    # (B, D/2, T)
+    angles = jnp.swapaxes(pos, 1, 2)[:, None, :, :] * freqs[None, None, None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)           # (B, 1, T, D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_in": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_out": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def mlp(params, x, compute_dtype=jnp.bfloat16):
+    xc = x.astype(compute_dtype)
+    g = xc @ params["w_gate"].astype(compute_dtype)
+    h = xc @ params["w_in"].astype(compute_dtype)
+    y = (jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * h)
+    return (y @ params["w_out"].astype(compute_dtype)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, tie: bool,
+               dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": jax.random.normal(k1, (vocab, d_model), dtype) * 0.02}
+    if not tie:
+        p["unembed"] = jax.random.normal(k2, (d_model, vocab),
+                                         dtype) * d_model ** -0.5
+    return p
+
+
+def embed(params, tokens):
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params, x, compute_dtype=jnp.bfloat16, n_valid: int | None = None):
+    w = params.get("unembed")
+    if w is None:
+        w = params["tok"].T
+    logits = (x.astype(compute_dtype)
+              @ w.astype(compute_dtype)).astype(jnp.float32)
+    if n_valid is not None and n_valid < logits.shape[-1]:
+        # vocab rows beyond n_valid are table padding (see configs.base)
+        col = jnp.arange(logits.shape[-1])
+        logits = jnp.where(col >= n_valid, -1e30, logits)
+    return logits

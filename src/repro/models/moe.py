@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN with top-k routing (Mixtral / Qwen3-MoE / Jamba).
+
+Dispatch uses the GShard/Mesh-TF einsum formulation: a (tokens, E, C)
+dispatch tensor turns routing into dot-products, which GSPMD shards cleanly —
+tokens on ("pod","data"), experts on "model" — lowering to the expected
+all-to-all pair on the mesh. Capacity drops overflow tokens (counted in the
+aux outputs); the load-balancing auxiliary loss follows Shazeer et al.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    dropped_fraction: jax.Array
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "router": jax.random.normal(ks[0], (d_model, n_experts), dtype) * s_in,
+        "w_gate": jax.random.normal(ks[1], (n_experts, d_model, d_ff),
+                                    dtype) * s_in,
+        "w_in": jax.random.normal(ks[2], (n_experts, d_model, d_ff),
+                                  dtype) * s_in,
+        "w_out": jax.random.normal(ks[3], (n_experts, d_ff, d_model),
+                                   dtype) * s_out,
+    }
+
+
+def moe_ffn(params, x, *, top_k: int, capacity_factor: float = 1.25,
+            n_groups: int = 1, dispatch: str = "einsum",
+            compute_dtype=jnp.bfloat16):
+    """x: (B, T, d) -> (y, MoEAux).
+
+    ``n_groups`` is the GShard routing-group count — set to the number of
+    data shards so capacity/dispatch are per-group: the dispatch tensor is
+    (G, n, E, c) with n = tokens per group, which shards as (1, n, E, c) per
+    device instead of a global (N, E, C) monster. The group dim carries the
+    all-to-all to expert-sharded weights.
+
+    ``dispatch``:
+      * "einsum" — GShard one-hot dispatch/combine einsums. Robustly
+        shardable, but burns 2*G*n*E*C*d MAC-FLOPs per layer on one-hot
+        matmuls (the §Perf baseline showed this dominating MoE compute:
+        useful fraction 0.04 for qwen3-moe).
+      * "gather" — sort-based dispatch: argsort by expert, scatter-add into
+        (E*C, d) buffers, gather back. Zero matmul FLOPs for routing; the
+        data movement is O(n*k*d) memory traffic instead.
+    """
+    B, T, d = x.shape
+    E = params["router"].shape[1]
+    N = B * T
+    G = n_groups if N % n_groups == 0 else 1
+    n = N // G
+    tokens = x.reshape(G, n, d)
+    C = max(int(n * top_k / E * capacity_factor), top_k)
+
+    logits = (tokens.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))        # (G, n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (G, n, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    if dispatch == "gather":
+        return _moe_gather(params, tokens, probs, gate_vals, gate_idx,
+                           B=B, T=T, d=d, E=E, C=C, top_k=top_k,
+                           compute_dtype=compute_dtype)
+
+    # GShard position assignment within each group, k-major priority
+    eh = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)        # (G, n, k, E)
+    ehf = eh.transpose(0, 2, 1, 3).reshape(G, top_k * n, E)  # k-major
+    pos = jnp.cumsum(ehf, axis=1) - 1                        # (G, kn, E)
+    pos = (pos * ehf).sum(-1).reshape(G, top_k, n).transpose(0, 2, 1)
+    in_cap = (pos < C) & (gate_vals > 0)                     # (G, n, k)
+
+    # dispatch/combine tensors (G, n, E, C)
+    disp = (jax.nn.one_hot(gate_idx, E, dtype=compute_dtype)[..., None]
+            * jax.nn.one_hot(pos, C, dtype=compute_dtype)[..., None, :]
+            * in_cap[..., None, None].astype(compute_dtype))  # (G,n,k,E,C)
+    combine = (disp * gate_vals[..., None, None].astype(compute_dtype)
+               ).sum(2)                                       # (G, n, E, C)
+    disp = disp.sum(2)                                        # (G, n, E, C)
+
+    # dispatch: (G,n,E,C)x(G,n,d) -> (E,G,C,d); contracting with E-sharded
+    # expert weights makes GSPMD emit the canonical all-to-all pair
+    xe = jnp.einsum("gnec,gnd->egcd", disp,
+                    tokens.astype(compute_dtype))             # (E, G, C, d)
+    g = jnp.einsum("egcd,edf->egcf", xe,
+                   params["w_gate"].astype(compute_dtype))
+    h = jnp.einsum("egcd,edf->egcf", xe,
+                   params["w_in"].astype(compute_dtype))
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * h
+    ye = jnp.einsum("egcf,efd->egcd", act,
+                    params["w_out"].astype(compute_dtype))    # (E, G, C, d)
+    y = jnp.einsum("gnec,egcd->gnd", combine, ye)
+
+    # aux: load-balance loss + drop rate (global means)
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    ce = jnp.mean(eh[:, :, 0].astype(jnp.float32), axis=(0, 1))
+    lb = E * jnp.sum(me * ce)
+    dropped = 1.0 - jnp.mean(in_cap.astype(jnp.float32))
+    return y.reshape(B, T, d).astype(x.dtype), MoEAux(lb, dropped)
+
+
+def _expert_ffn(params, xe, compute_dtype):
+    """xe: (E, ..., d) -> (E, ..., d) via stacked expert SwiGLU."""
+    g = jnp.einsum("e...d,edf->e...f", xe,
+                   params["w_gate"].astype(compute_dtype))
+    h = jnp.einsum("e...d,edf->e...f", xe,
+                   params["w_in"].astype(compute_dtype))
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * h
+    return jnp.einsum("e...f,efd->e...d", act,
+                      params["w_out"].astype(compute_dtype))
+
+
+def _moe_gather(params, tokens, probs, gate_vals, gate_idx, *, B, T, d, E,
+                C, top_k, compute_dtype):
+    """Sort-based dispatch (§Perf optimization; see moe_ffn docstring)."""
+    G, n, _ = tokens.shape
+    k = top_k
+    flat_e = gate_idx.reshape(G, n * k)                       # (G, nk)
+    order = jnp.argsort(flat_e, axis=1, stable=True)          # (G, nk)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    tok_of = order // k                                       # source token
+    # position within expert: running index minus expert start offset
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(flat_e)
+    starts = jnp.cumsum(counts, axis=1) - counts              # (G, E)
+    pos = (jnp.arange(n * k)[None, :]
+           - jnp.take_along_axis(starts, sorted_e, axis=1))   # (G, nk)
+    keep = pos < C
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)         # E*C = dropped
+
+    toks_sorted = jnp.take_along_axis(
+        tokens.astype(compute_dtype), tok_of[..., None], axis=1)
+
+    def scatter_one(tk, sl):
+        buf = jnp.zeros((E * C + 1, d), compute_dtype)
+        return buf.at[sl].add(tk, mode="drop")[:E * C]
+
+    xe = jax.vmap(scatter_one)(toks_sorted, slot)             # (G, E*C, d)
+    xe = xe.reshape(G, E, C, d).transpose(1, 0, 2, 3)         # (E, G, C, d)
+    ye = _expert_ffn(params, xe, compute_dtype)               # (E, G, C, d)
+    ye = ye.transpose(1, 0, 2, 3).reshape(G, E * C, d)
+
+    def gather_one(buf, sl):
+        padded = jnp.concatenate([buf, jnp.zeros((1, d), compute_dtype)])
+        return padded[jnp.minimum(sl, E * C)]
+
+    out_sorted = jax.vmap(gather_one)(ye, slot)               # (G, nk, d)
+    gates_sorted = jnp.take_along_axis(
+        gate_vals.reshape(G, n * k), order, axis=1)
+    contrib = out_sorted * (gates_sorted
+                            * keep.astype(jnp.float32))[..., None].astype(
+        compute_dtype)
+    # scatter-add back to token order, summing the k expert contributions
+    def unsort_one(c, t):
+        return jnp.zeros((n, d), compute_dtype).at[t].add(c)
+
+    y = jax.vmap(unsort_one)(contrib, tok_of)                 # (G, n, d)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), axis=(0, 1))
+    lb = E * jnp.sum(me * ce)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return (y.reshape(B, T, d).astype(tokens.dtype),
+            MoEAux(lb, dropped))

@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD — state space duality) mixer layer, chunked scan + decode.
+
+Implements the SSD algorithm (Dao & Gu 2024): the sequence is split into
+chunks; intra-chunk terms are computed as (masked, decay-weighted) attention-
+like matmuls — MXU-friendly — while inter-chunk terms flow through a small
+sequential scan over per-chunk states (h, p, n). This is the TPU-native
+adaptation: the CUDA implementation leans on warp-level scans; here the
+state recurrence is a lax.scan over (seq/chunk) steps with all heavy lifting
+in einsums.
+
+Single group (g=1) B/C projections; per-head scalar decay A (SSD).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMState(NamedTuple):
+    ssm: jax.Array    # (B, H, P, N) running state
+    conv: jax.Array   # (B, K-1, conv_dim) last inputs for the causal conv
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    return d_inner, H, cfg.ssm_headdim, cfg.ssm_state
+
+
+def init_ssm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N                       # x, B, C go through conv
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        # order: [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * d_inner + 2 * N + H), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                    dtype) * 0.2,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (d_inner, d),
+                                      dtype) * d_inner ** -0.5,
+    }
+
+
+def _split(cfg, zxbcdt):
+    d_inner, H, P, N = dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    Bm = zxbcdt[..., 2 * d_inner:2 * d_inner + N]
+    Cm = zxbcdt[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv. u: (B, T, D), w: (K, D)."""
+    K = w.shape[0]
+    upad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(upad[:, i:i + u.shape[1], :] * w[i][None, None]
+              for i in range(K))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype)
+
+
+def _segsum(a):
+    """exp-able segment sums: L[i, j] = sum_{j < k <= i} a_k (lower-tri)."""
+    T = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    L = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def ssd_scan(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD. xh: (B,L,H,P), dt: (B,L,H) (post-softplus),
+    A: (H,) negative decay rates, Bm/Cm: (B,L,N). Returns (B,L,H,P) and the
+    final state (B,H,P,N)."""
+    Bsz, L, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    c = lambda t: t.reshape((Bsz, nc, chunk) + t.shape[2:])
+    xc, dtc, Bc, Cc = c(xh), c(dt), c(Bm), c(Cm)
+
+    dA = dtc * A[None, None, None, :]                # (B,nc,cs,H) log-decays
+    dA = jnp.moveaxis(dA, -1, 2)                     # (B,nc,H,cs)
+    cum = jnp.cumsum(dA, axis=-1)                    # (B,nc,H,cs)
+
+    # 1) intra-chunk (diagonal blocks): decay-masked attention on the MXU
+    Lmat = jnp.exp(_segsum(dA))                      # (B,nc,H,cs,cs)
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)        # (B,nc,cs,cs)
+    M = G[:, :, None] * Lmat                         # (B,nc,H,cs,cs)
+    xdt = xc * jnp.moveaxis(dtc, -1, -1)[..., None]  # (B,nc,cs,H,P) * dt
+    xdt = xc * dtc[..., None]
+    Y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xdt)
+
+    # 2) chunk states: decay-to-end weighted outer products
+    decay_end = jnp.exp(cum[..., -1:] - cum)         # (B,nc,H,cs)
+    S = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bc,
+                   decay_end * jnp.moveaxis(dtc, 2, 3)
+                   if False else decay_end * jnp.moveaxis(dtc, -1, 2), xc)
+
+    # 3) inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(cum[..., -1])              # (B,nc,H)
+
+    def step(carry, inp):
+        S_c, g_c = inp                               # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * g_c[..., None, None] + S_c
+        return new, prev
+
+    S_seq = jnp.moveaxis(S, 1, 0)                    # (nc,B,H,P,N)
+    g_seq = jnp.moveaxis(chunk_decay, 1, 0)          # (nc,B,H)
+    init = jnp.zeros_like(S_seq[0])
+    final, prev_states = jax.lax.scan(step, init, (S_seq, g_seq))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)    # (B,nc,H,P,N)
+
+    # 4) off-diagonal contribution: state entering the chunk, decayed to i
+    in_decay = jnp.exp(cum)                          # (B,nc,H,cs)
+    Y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", Cc, prev_states, in_decay)
+
+    Y = (Y_diag + Y_off).reshape(Bsz, L, H, P)
+    return Y, final
+
+
+def ssm_mixer(params, x, cfg, compute_dtype=jnp.bfloat16):
+    """Full Mamba-2 block (training / prefill). x: (B, T, d)."""
+    from repro.models.layers import rms_norm
+    B, T, d = x.shape
+    d_inner, H, P, N = dims(cfg)
+    zxbcdt = (x.astype(compute_dtype)
+              @ params["in_proj"].astype(compute_dtype))
+    z, xu, Bm, Cm, dt = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xu, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"].astype(compute_dtype))
+    xu, Bm, Cm = (conv_out[..., :d_inner], conv_out[..., d_inner:d_inner + N],
+                  conv_out[..., d_inner + N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])     # (B,T,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (H,)
+    xh = xu.reshape(B, T, H, P).astype(jnp.float32)
+    # Pallas intra-chunk kernel on TPU; this pure-jnp scan elsewhere
+    from repro.kernels.ssd import ops as ssd_ops
+    Y, _ = ssd_ops.ssd_scan(xh, dt, A, Bm.astype(jnp.float32),
+                            Cm.astype(jnp.float32), cfg.ssm_chunk)
+    Y = Y + params["D"][None, None, :, None] * xh
+    y = Y.reshape(B, T, d_inner).astype(compute_dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(compute_dtype),
+                 params["norm"], cfg.norm_eps)
+    return (y @ params["out_proj"].astype(compute_dtype)).astype(x.dtype)
+
+
+def ssm_decode(params, x, cfg, state: SSMState,
+               compute_dtype=jnp.bfloat16):
+    """Single-token decode. x: (B, 1, d). O(1) state update — the reason
+    long_500k is cheap for SSM archs."""
+    from repro.models.layers import rms_norm
+    B, _, d = x.shape
+    d_inner, H, P, N = dims(cfg)
+    zxbcdt = (x.astype(compute_dtype)
+              @ params["in_proj"].astype(compute_dtype))
+    z, xu, Bm, Cm, dt = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xu, Bm, Cm], axis=-1)          # (B,1,conv_dim)
+    hist = jnp.concatenate([state.conv, conv_in], axis=1)     # (B,K,conv)
+    w = params["conv_w"].astype(compute_dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                   w.astype(jnp.float32)))[:, None].astype(compute_dtype)
+    new_conv = hist[:, 1:]
+    xu, Bm, Cm = (conv_out[..., :d_inner], conv_out[..., d_inner:d_inner + N],
+                  conv_out[..., d_inner + N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None])                                 # (B,H)
+    xh = xu.reshape(B, H, P).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)                          # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    new_ssm = (state.ssm * dA[..., None, None]
+               + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bv))
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cv) + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(compute_dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(compute_dtype),
+                 params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(compute_dtype)).astype(x.dtype)
+    return out, SSMState(new_ssm, new_conv)
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32,
+               conv_dtype=jnp.bfloat16) -> SSMState:
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return SSMState(jnp.zeros((batch, H, P, N), dtype),
+                    jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim),
+                              conv_dtype))

@@ -1,0 +1,369 @@
+"""Generic LM stack: decoder-only, hybrid SSM/attention, MoE interleaves,
+and encoder-decoder — driven entirely by ModelConfig.layer_pattern.
+
+Layer parameters are stacked per pattern-position and scanned over periods
+(jax.lax.scan) so the lowered HLO contains each distinct layer body once —
+this keeps 80-layer dry-run compiles fast and is remat-friendly. The
+remainder (n_layers % period) is unrolled.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm
+from repro.configs.base import LayerDesc, ModelConfig
+
+
+class Aux(NamedTuple):
+    moe_loss: jax.Array
+    dropped: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, desc: LayerDesc, *,
+               cross: bool = False, dtype=jnp.float32):
+    norm_init, _ = layers.make_norm(cfg)
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": norm_init(ks[0]), "ln2": norm_init(ks[1])}
+    if desc.kind == "attn":
+        p["attn"] = attn.init_attn(ks[2], cfg, dtype=dtype)
+    else:
+        p["ssm"] = ssm.init_ssm(ks[2], cfg, dtype=dtype)
+    if cross:
+        p["ln_x"] = norm_init(ks[3])
+        p["cross"] = attn.init_attn(ks[4], cfg, cross=True, dtype=dtype)
+    if desc.moe:
+        p["moe"] = moe.init_moe(ks[5], cfg.d_model, cfg.moe_d_ff,
+                                cfg.moe_experts, dtype=dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = layers.init_mlp(ks[5], cfg.d_model, cfg.d_ff, dtype=dtype)
+    else:
+        del p["ln2"]   # pure-mixer block (Mamba-2): no FFN sub-block
+    return p
+
+
+def _split_plan(cfg: ModelConfig):
+    plan = cfg.plan()
+    period = cfg.period
+    n_full = len(plan) // period
+    rest = plan[n_full * period:]
+    return plan, period, n_full, rest
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32):
+    plan, period, n_full, rest = _split_plan(cfg)
+    k_emb, k_stack, k_rest, k_fin, k_enc = jax.random.split(key, 5)
+    params: dict[str, Any] = {
+        "embed": layers.init_embed(k_emb, cfg.vocab_padded, cfg.d_model,
+                                   cfg.tie_embeddings, dtype=dtype),
+    }
+    cross = cfg.enc_dec
+    if n_full:
+        stacked = []
+        for pos in range(period):
+            keys = jax.random.split(jax.random.fold_in(k_stack, pos), n_full)
+            stacked.append(jax.vmap(
+                lambda k: init_layer(k, cfg, cfg.layer_pattern[pos],
+                                     cross=cross, dtype=dtype))(keys))
+        params["stack"] = tuple(stacked)
+    params["rest"] = tuple(
+        init_layer(jax.random.fold_in(k_rest, i), cfg, desc, cross=cross,
+                   dtype=dtype)
+        for i, desc in enumerate(rest))
+    norm_init, _ = layers.make_norm(cfg)
+    params["final_norm"] = norm_init(k_fin)
+    if cfg.enc_dec:
+        enc_desc = LayerDesc(kind="attn", window=None, moe=False)
+        keys = jax.random.split(k_enc, cfg.enc_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: init_layer(k, cfg, enc_desc, dtype=dtype))(keys)
+        params["enc_norm"] = norm_init(jax.random.fold_in(k_enc, 1))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application (shared by train/prefill and decode)
+# ---------------------------------------------------------------------------
+
+def apply_layer(p, x, cfg: ModelConfig, desc: LayerDesc, *, positions=None,
+                enc_kv=None, causal=True, attn_impl="auto",
+                moe_groups: int = 1, compute_dtype=jnp.bfloat16):
+    _, norm = layers.make_norm(cfg)
+    h = norm(x, p["ln1"])
+    if desc.kind == "attn":
+        h = attn.attend(p["attn"], h, cfg, window=desc.window,
+                        positions=positions, causal=causal,
+                        compute_dtype=compute_dtype, attn_impl=attn_impl)
+    else:
+        h = ssm.ssm_mixer(p["ssm"], h, cfg, compute_dtype=compute_dtype)
+    x = x + h
+    if enc_kv is not None and "cross" in p:
+        x = x + attn.attend_cross(p["cross"], norm(x, p["ln_x"]), enc_kv,
+                                  cfg, compute_dtype=compute_dtype)
+    zero_aux = Aux(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if "ln2" not in p:                       # pure-mixer block (no FFN)
+        return x, zero_aux
+    h2 = norm(x, p["ln2"])
+    if desc.moe:
+        y, aux = moe.moe_ffn(p["moe"], h2, top_k=cfg.moe_top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             n_groups=moe_groups, dispatch=cfg.moe_dispatch,
+                             compute_dtype=compute_dtype)
+        aux = Aux(aux.load_balance_loss, aux.dropped_fraction)
+    else:
+        y = layers.mlp(p["mlp"], h2, compute_dtype=compute_dtype)
+        aux = zero_aux
+    return x + y, aux
+
+
+def apply_layer_decode(p, x, cache, cfg: ModelConfig, desc: LayerDesc, *,
+                       enc_kv=None, cross_kv=None, moe_groups: int = 1,
+                       compute_dtype=jnp.bfloat16):
+    _, norm = layers.make_norm(cfg)
+    h = norm(x, p["ln1"])
+    if desc.kind == "attn":
+        h, cache = attn.attend_decode(p["attn"], h, cfg, cache,
+                                      window=desc.window,
+                                      compute_dtype=compute_dtype)
+    else:
+        h, cache = ssm.ssm_decode(p["ssm"], h, cfg, cache,
+                                  compute_dtype=compute_dtype)
+    x = x + h
+    if (enc_kv is not None or cross_kv is not None) and "cross" in p:
+        x = x + attn.attend_cross(p["cross"], norm(x, p["ln_x"]), enc_kv,
+                                  cfg, compute_dtype=compute_dtype,
+                                  kv=cross_kv)
+    if "ln2" not in p:                       # pure-mixer block (no FFN)
+        return x, cache
+    h2 = norm(x, p["ln2"])
+    if desc.moe:
+        y, _ = moe.moe_ffn(p["moe"], h2, top_k=cfg.moe_top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           n_groups=moe_groups, dispatch=cfg.moe_dispatch,
+                           compute_dtype=compute_dtype)
+    else:
+        y = layers.mlp(p["mlp"], h2, compute_dtype=compute_dtype)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def encode(params, frames, cfg: ModelConfig, *, attn_impl="auto",
+           compute_dtype=jnp.bfloat16):
+    """Encoder for enc-dec models. ``frames``: precomputed frontend
+    embeddings (B, Te, d) — the conv frontend is a stub per the brief."""
+    _, norm = layers.make_norm(cfg)
+    x = frames
+    desc = LayerDesc(kind="attn")
+
+    def body(x, p):
+        h = norm(x, p["ln1"])
+        h = attn.attend(p["attn"], h, cfg, causal=False, use_rope=True,
+                        compute_dtype=compute_dtype, attn_impl="jnp")
+        x = x + h
+        y = layers.mlp(p["mlp"], norm(x, p["ln2"]),
+                       compute_dtype=compute_dtype)
+        return x + y, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return norm(x, params["enc_norm"])
+
+
+def forward(params, tokens, cfg: ModelConfig, *, positions=None,
+            enc_kv=None, inputs_embeds=None, attn_impl="auto",
+            compute_dtype=jnp.bfloat16, remat: bool = False,
+            remat_policy=None, moe_groups: int = 1,
+            unroll_scan: bool = False, logits_last_only: bool = False):
+    """Returns (logits (B,T,V) f32, Aux). ``logits_last_only`` computes the
+    unembed for the final position only (serving prefill — §Perf: the
+    full-sequence unembed dominates prefill FLOPs for large vocabularies).
+
+    ``unroll_scan=True`` replaces the period scan with a Python loop — used
+    by the roofline probe (exact FLOP counting on unoptimized HLO; XLA's
+    cost analysis visits a while body once, an unrolled module has no loop).
+
+    ``remat=True`` rematerializes each scanned period (activation
+    checkpointing): memory per layer-period drops to the carried residual
+    stream; ``remat_policy`` (e.g. jax.checkpoint_policies
+    .dots_with_no_batch_dims_saveable) trades recompute for saved matmuls.
+    """
+    plan, period, n_full, rest = _split_plan(cfg)
+    x = (inputs_embeds if inputs_embeds is not None
+         else layers.embed(params["embed"], tokens)).astype(compute_dtype)
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    aux0 = Aux(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+    def period_body(carry, per_period):
+        x, aux = carry
+        for pos in range(period):
+            p = jax.tree.map(lambda a: a, per_period[pos])
+            x, a = apply_layer(p, x, cfg, cfg.layer_pattern[pos],
+                               positions=positions, enc_kv=enc_kv,
+                               attn_impl=attn_impl, moe_groups=moe_groups,
+                               compute_dtype=compute_dtype)
+            aux = Aux(aux.moe_loss + a.moe_loss, aux.dropped + a.dropped)
+        return (x, aux), None
+
+    if n_full and unroll_scan:
+        carry = (x, aux0)
+        for i in range(n_full):
+            sl = jax.tree.map(lambda a: a[i], params["stack"])
+            carry, _ = period_body(carry, sl)
+        x, aux = carry
+    elif n_full:
+        body = period_body
+        if remat:
+            body = jax.checkpoint(period_body, policy=remat_policy,
+                                  prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["stack"])
+    else:
+        aux = aux0
+    for i, desc in enumerate(rest):
+        x, a = apply_layer(params["rest"][i], x, cfg, desc,
+                           positions=positions, enc_kv=enc_kv,
+                           attn_impl=attn_impl, moe_groups=moe_groups,
+                           compute_dtype=compute_dtype)
+        aux = Aux(aux.moe_loss + a.moe_loss, aux.dropped + a.dropped)
+
+    _, norm = layers.make_norm(cfg)
+    x = norm(x, params["final_norm"])
+    if logits_last_only:
+        x = x[:, -1:, :]
+    logits = layers.unembed(params["embed"], x, compute_dtype=compute_dtype,
+                            n_valid=cfg.vocab)
+    n_moe = max(sum(d.moe for d in plan), 1)
+    return logits, Aux(aux.moe_loss / n_moe, aux.dropped / n_moe)
+
+
+# ---------------------------------------------------------------------------
+# serving (single-token decode with caches)
+# ---------------------------------------------------------------------------
+
+class ServeState(NamedTuple):
+    stack_caches: Any     # tuple per pattern-position of stacked caches
+    rest_caches: Any      # tuple per remainder layer
+    enc_kv: Any           # encoder output (enc-dec) or None
+    cross_kv: Any = None  # precomputed per-layer cross K/V (§Perf) or None
+
+
+def _init_cache_for(cfg, desc: LayerDesc, batch: int, max_len: int,
+                    dtype=jnp.bfloat16, ring_cache: bool = False):
+    if desc.kind == "attn":
+        if ring_cache and desc.window is not None:
+            max_len = min(max_len, desc.window)   # ring buffer (§Perf)
+        return attn.init_cache(cfg, batch, max_len, dtype=dtype)
+    return ssm.init_state(cfg, batch, conv_dtype=dtype)
+
+
+def init_serve(cfg: ModelConfig, batch: int, max_len: int,
+               enc_kv=None, cache_dtype=jnp.bfloat16,
+               ring_cache: bool = False) -> ServeState:
+    plan, period, n_full, rest = _split_plan(cfg)
+    stack_caches = tuple(
+        jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_full,) + a.shape).copy(),
+            _init_cache_for(cfg, cfg.layer_pattern[pos], batch, max_len,
+                            cache_dtype, ring_cache))
+        for pos in range(period)) if n_full else ()
+    rest_caches = tuple(_init_cache_for(cfg, d, batch, max_len, cache_dtype,
+                                        ring_cache)
+                        for d in rest)
+    return ServeState(stack_caches, rest_caches, enc_kv)
+
+
+def precompute_cross_kv(params, enc_kv, cfg: ModelConfig,
+                        compute_dtype=jnp.bfloat16):
+    """Per-layer encoder K/V for an enc-dec serve session (§Perf): call
+    once after ``encode`` and attach via ``state._replace(cross_kv=...,
+    enc_kv=None)`` — decode then never re-projects the encoder states."""
+    plan, period, n_full, rest = _split_plan(cfg)
+    stack = tuple(
+        jax.vmap(lambda p: attn.project_cross_kv(p["cross"], enc_kv, cfg,
+                                                 compute_dtype))(
+            params["stack"][pos])
+        for pos in range(period)) if n_full else ()
+    rest_kv = tuple(
+        attn.project_cross_kv(params["rest"][i]["cross"], enc_kv, cfg,
+                              compute_dtype)
+        for i in range(len(rest)))
+    return stack, rest_kv
+
+
+def decode_step(params, token, state: ServeState, cfg: ModelConfig, *,
+                moe_groups: int = 1, compute_dtype=jnp.bfloat16):
+    """token: (B, 1) int32 -> (logits (B,1,V), new state)."""
+    plan, period, n_full, rest = _split_plan(cfg)
+    x = layers.embed(params["embed"], token).astype(compute_dtype)
+
+    has_ckv = state.cross_kv is not None
+
+    def period_body(x, xs):
+        if has_ckv:
+            per_params, per_caches, per_ckv = xs
+        else:
+            per_params, per_caches = xs
+            per_ckv = None
+        new_caches = []
+        for pos in range(period):
+            ckv = per_ckv[pos] if has_ckv else None
+            x, c = apply_layer_decode(per_params[pos], x, per_caches[pos],
+                                      cfg, cfg.layer_pattern[pos],
+                                      enc_kv=state.enc_kv, cross_kv=ckv,
+                                      moe_groups=moe_groups,
+                                      compute_dtype=compute_dtype)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if n_full:
+        xs = ((params["stack"], state.stack_caches, state.cross_kv[0])
+              if has_ckv else (params["stack"], state.stack_caches))
+        x, new_stack = jax.lax.scan(period_body, x, xs)
+    else:
+        new_stack = ()
+    new_rest = []
+    for i, desc in enumerate(rest):
+        ckv = state.cross_kv[1][i] if has_ckv else None
+        x, c = apply_layer_decode(params["rest"][i], x,
+                                  state.rest_caches[i], cfg, desc,
+                                  enc_kv=state.enc_kv, cross_kv=ckv,
+                                  moe_groups=moe_groups,
+                                  compute_dtype=compute_dtype)
+        new_rest.append(c)
+
+    _, norm = layers.make_norm(cfg)
+    x = norm(x, params["final_norm"])
+    logits = layers.unembed(params["embed"], x, compute_dtype=compute_dtype,
+                            n_valid=cfg.vocab)
+    return logits, ServeState(new_stack, tuple(new_rest), state.enc_kv,
+                              state.cross_kv)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, tokens, labels, cfg: ModelConfig, *, enc_kv=None,
+            inputs_embeds=None, attn_impl="auto", moe_loss_weight=0.01,
+            compute_dtype=jnp.bfloat16, remat: bool = False,
+            remat_policy=None, moe_groups: int = 1):
+    logits, aux = forward(params, tokens, cfg, enc_kv=enc_kv,
+                          inputs_embeds=inputs_embeds, attn_impl=attn_impl,
+                          compute_dtype=compute_dtype, remat=remat,
+                          remat_policy=remat_policy, moe_groups=moe_groups)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll) + moe_loss_weight * aux.moe_loss
+    return loss, aux

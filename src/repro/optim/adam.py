@@ -1,0 +1,72 @@
+"""Minimal-but-real Adam/AdamW implementation (optax is not vendored here).
+
+Used by (a) GP hyperparameter MLE (core/hyper.py) and (b) the LM training
+loop (launch/train.py). Pytree-native, jit/shard_map friendly, supports
+global-norm clipping, decoupled weight decay, and schedule callables.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+class Adam(NamedTuple):
+    lr: float | Callable = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float | None = None
+
+    def init(self, params) -> AdamState:
+        z = jax.tree.map(jnp.zeros_like, params)
+        return AdamState(jnp.zeros((), jnp.int32), z,
+                         jax.tree.map(jnp.zeros_like, params))
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p
+            return p - lr * u
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(step, mu, nu)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.0) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,2 @@
+from repro.parallel.runner import (Runner, ShardMapRunner, VmapRunner,  # noqa
+                                   make_runner)

@@ -1,0 +1,115 @@
+"""Execution backends for per-machine GP programs.
+
+The paper's algorithms are written ONCE as per-machine functions that use
+``jax.lax`` collectives over ``axis_name`` (psum / all_gather / psum_scatter /
+all_to_all — the TPU realization of the paper's MPI broadcast/reduce). A
+Runner decides how the machine axis is realized:
+
+* ``VmapRunner``    — `jax.vmap(axis_name=...)`: single-device simulation of M
+  machines. Used by tests and CPU examples; bit-identical math.
+* ``ShardMapRunner`` — `jax.shard_map` over one or more mesh axes: the real
+  multi-device execution (multi-pod dry-run uses ("pod", "data")).
+
+Both consume *stacked* inputs with a leading machine axis (M, ...) and return
+stacked outputs (M, ...), so callers are backend-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Runner:
+    """Abstract machine-axis executor."""
+    axis_name: Any = "machines"
+
+    @property
+    def num_machines(self) -> int:
+        raise NotImplementedError
+
+    def map(self, fn: Callable, sharded: Sequence, replicated: Sequence = ()):
+        """Run per-machine ``fn(*block_args, *replicated_args)``.
+
+        ``sharded`` entries are pytrees whose leaves carry a leading (M, ...)
+        machine axis; ``fn`` sees them without it. Returns stacked outputs.
+        """
+        raise NotImplementedError
+
+    def shard_blocks(self, X: jax.Array) -> jax.Array:
+        """(n, ...) -> (M, n/M, ...) block layout (paper Def. 1)."""
+        M = self.num_machines
+        n = X.shape[0]
+        assert n % M == 0, f"n={n} must divide M={M} (Def. 1)"
+        return X.reshape((M, n // M) + X.shape[1:])
+
+    def unshard(self, Xb: jax.Array) -> jax.Array:
+        return Xb.reshape((-1,) + Xb.shape[2:])
+
+
+@dataclasses.dataclass(frozen=True)
+class VmapRunner(Runner):
+    """Single-device simulation of M machines via vmap collectives."""
+    M: int = 4
+
+    @property
+    def num_machines(self) -> int:
+        return self.M
+
+    def map(self, fn, sharded, replicated=()):
+        g = lambda *blocks: fn(*blocks, *replicated)
+        return jax.vmap(g, axis_name=self.axis_name)(*sharded)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMapRunner(Runner):
+    """Real distribution over mesh axes.
+
+    ``axis_name`` may be a single mesh axis ("data") or a tuple
+    (("pod", "data")) — collectives inside per-machine code reduce over all of
+    them; the number of machines is the product of the axis sizes.
+    """
+    mesh: Mesh | None = None
+
+    def __post_init__(self):
+        assert self.mesh is not None
+
+    @property
+    def axes(self) -> tuple[str, ...]:
+        a = self.axis_name
+        return (a,) if isinstance(a, str) else tuple(a)
+
+    @property
+    def num_machines(self) -> int:
+        out = 1
+        for a in self.axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    def map(self, fn, sharded, replicated=()):
+        n_shard = len(sharded)
+        spec = P(self.axes if len(self.axes) > 1 else self.axes[0])
+
+        def inner(*args):
+            blocks = tuple(jax.tree.map(lambda a: a[0], x)
+                           for x in args[:n_shard])
+            out = fn(*blocks, *args[n_shard:])
+            return jax.tree.map(lambda a: a[None], out)
+
+        in_specs = tuple(spec for _ in sharded) + tuple(P() for _ in replicated)
+        return jax.shard_map(inner, mesh=self.mesh, in_specs=in_specs,
+                             out_specs=spec)(*sharded, *replicated)
+
+
+def make_runner(mode: str, *, M: int | None = None, mesh: Mesh | None = None,
+                axis_name="machines") -> Runner:
+    if mode == "vmap":
+        return VmapRunner(M=M, axis_name=axis_name)
+    if mode == "shard_map":
+        return ShardMapRunner(mesh=mesh, axis_name=axis_name)
+    raise ValueError(f"unknown runner mode {mode!r}")

@@ -1,0 +1,193 @@
+"""Sharding rules: DP/FSDP over ("pod","data"), TP/EP over "model", SP for
+long-context KV caches.
+
+Rules are name-convention based over the param tree and *size-aware*: an axis
+is only sharded if its size divides the mesh axis product (so the same rules
+serve the 512-chip production mesh and tiny smoke meshes). Priority when a
+dim can't shard: drop to None (replicate) — correctness first, the roofline
+pass tells us what it cost.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP = ("pod", "data")     # data/FSDP axes (pod may be absent on 1-pod meshes)
+TP = "model"
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in DP if a in mesh.shape)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _fit(dim: int, mesh: Mesh, axes):
+    """axes if dim divides their product else None."""
+    return axes if (axes and dim % _size(mesh, axes) == 0) else None
+
+
+def spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter, by name convention."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def fit(i, axes):
+        return _fit(shape[i], mesh, axes)
+
+    last = path.rsplit("/", 1)[-1]
+
+    # MoE expert weights (E, d, ff)/(E, ff, d) — checked BEFORE the 2-D name
+    # rules (same leaf names) so the expert dim is handled explicitly
+    if len(shape) == 3 and last in ("w_gate", "w_in", "w_out"):
+        if shape[0] % _size(mesh, TP) == 0:
+            return P(TP, fit(1, dp), None)     # EP: experts on model
+        return P(None, fit(1, dp), fit(2, TP))  # TP fallback inside experts
+
+    if last in ("tok",):                       # (V, d) embed
+        # small tables: replicate d — avoids a partial-sum all-reduce of
+        # full logits over DP from the d-contraction (§Perf iteration 3)
+        small = shape[0] * shape[1] * 4 <= 2 ** 31
+        return P(fit(0, TP), None if small else fit(1, dp))
+    if last in ("unembed",):                   # (d, V)
+        small = shape[0] * shape[1] * 4 <= 2 ** 31
+        return P(None if small else fit(0, dp), fit(1, TP))
+    if last in ("wq", "wk", "wv", "w_gate", "w_in", "in_proj"):
+        return P(fit(0, dp), fit(1, TP))       # (d, out): TP on out
+    if last in ("wo", "w_out", "out_proj"):
+        return P(fit(0, TP), fit(1, dp))       # (in, d): TP on in
+    if last == "router":                       # (d, E) — small, replicate
+        return P(None, None)
+    if last == "conv_w":                       # (K, conv_dim)
+        return P(None, fit(1, TP))
+    if len(shape) == 3:                        # other stacked 3-D weights
+        return P(None, fit(1, dp), fit(2, TP))
+    if len(shape) == 1:
+        return P(fit(0, TP))                   # per-channel vectors
+    if len(shape) == 2:
+        return P(fit(0, dp), fit(1, TP))
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+PURE_DP_THRESHOLD_BYTES = 4e9   # below this, replicate params: no TP/FSDP
+
+
+def use_tp_policy(params) -> bool:
+    """Size-aware parallelism policy: tiny models (e.g. mamba2-130m) pay
+    more in per-layer TP all-reduces than they save — replicate them and
+    spend every mesh axis on data parallelism (§Perf iteration 3b)."""
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+    return total > PURE_DP_THRESHOLD_BYTES
+
+
+def param_specs(params: Any, mesh: Mesh, use_tp: bool | None = None):
+    """Pytree of PartitionSpecs.
+
+    Stacked-scan params carry a leading (n_full) layer axis — detected by the
+    'stack'/'encoder' path component — which is never sharded (it is the scan
+    dimension); rules apply to the trailing dims.
+
+    ``use_tp=False`` (auto for small models) replicates every parameter —
+    pure data parallelism over all mesh axes.
+    """
+    if use_tp is None:
+        use_tp = use_tp_policy(params)
+
+    def one(path, leaf):
+        if not use_tp:
+            return P(*(None,) * leaf.ndim)
+        p = _path_str(path)
+        shape = leaf.shape
+        if ("stack/" in p or p.startswith("stack") or "encoder" in p) \
+                and leaf.ndim >= 1:
+            inner = spec_for(p, shape[1:], mesh)
+            return P(None, *inner)
+        return spec_for(p, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def shardings(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, use_tp: bool = True,
+               batch: int | None = None) -> P:
+    dp = dp_axes(mesh)
+    if not use_tp and TP in mesh.shape:
+        dp = dp + (TP,)          # pure DP: batch over every axis
+    if batch is not None:        # drop axes until the batch divides
+        while dp and batch % _size(mesh, dp):
+            dp = dp[:-1]
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None))
+
+
+def logits_spec(mesh: Mesh, *, batch: int | None = None,
+                vocab: int | None = None) -> P:
+    dp = dp_axes(mesh)
+    dpx = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if batch is not None and (batch % max(_size(mesh, dpx), 1) or batch == 1):
+        dpx = None
+    tp = TP
+    if vocab is not None and vocab % _size(mesh, TP):
+        tp = None
+    return P(dpx, None, tp)
+
+
+def cache_spec(mesh: Mesh, *, batch: int, n_kv: int, seq: int,
+               stacked: bool) -> P:
+    """KV cache (B, Hkv, T, hd) sharding.
+
+    decode_32k-style (large batch): batch on DP, heads on TP if divisible.
+    long_500k-style (batch 1): sequence-parallel — T on DP (flash-decode
+    layout; GSPMD turns the softmax/PV contractions into all-reduces).
+    """
+    dp = dp_axes(mesh)
+    dpx = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp_heads = TP if (n_kv % _size(mesh, TP) == 0) else None
+    if batch % max(_size(mesh, dpx), 1) == 0 and batch > 1:
+        spec = P(dpx, tp_heads, None, None)
+    else:
+        spec = P(None, tp_heads, dpx, None)
+    if stacked:
+        return P(None, *spec)
+    return spec
+
+
+def ssm_state_spec(mesh: Mesh, *, batch: int, n_heads: int,
+                   stacked: bool) -> P:
+    dp = dp_axes(mesh)
+    dpx = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp_heads = TP if (n_heads % _size(mesh, TP) == 0) else None
+    if batch % max(_size(mesh, dpx), 1) == 0 and batch > 1:
+        spec = P(dpx, tp_heads, None, None)
+    else:
+        spec = P(None, tp_heads, None, None)
+    if stacked:
+        return P(None, *spec)
+    return spec

@@ -1,0 +1,206 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+  compute    = HLO_FLOPs        / (chips * PEAK_FLOPS_BF16)
+  memory     = HLO_bytes        / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW_PER_LINK * ICI_LINKS)
+
+Sources & caveats (CPU container, TPU target — no wall clocks):
+* ``compiled.cost_analysis()`` counts a while body ONCE (verified on this
+  build). FLOPs are therefore taken from an *unrolled probe* —
+  ``lowered.cost_analysis()`` of the same step with the layer scan unrolled
+  (no loop, no XLA compile needed; matmul FLOPs are optimization-invariant).
+* HBM bytes: compiled "bytes accessed" rescaled by the probe/raw FLOP ratio
+  to spread the loop body over its trip count (documented estimate — fusion
+  means unoptimized byte counts would be useless).
+* collective bytes: parsed from compiled HLO per computation, while bodies
+  scaled by their ``known_trip_count`` (roofline/hlo_parse.py).
+* MODEL_FLOPS = 6·N(active)·D for train, 2·N(active)·D per generated token
+  for decode — the "useful work" yardstick; ratio to HLO FLOPs exposes
+  remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from repro.roofline import hlo_parse, hw
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw measurements
+    hlo_flops: float              # probe (exact, unrolled)
+    hlo_flops_raw: float          # compiled cost_analysis (loop body x1)
+    hlo_bytes: float              # rescaled estimate (see module docstring)
+    collective: dict
+    model_flops: float
+    bytes_per_device: float       # peak HBM from memory_analysis
+    napkin_bytes_est: float = 0.0  # fusion-aware analytic HBM traffic
+    # derived terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0         # napkin (headline; see docstring)
+    t_memory_hlo_upper: float = 0.0  # CPU-HLO derived upper bound
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_fraction: float = 0.0  # MODEL_FLOPS / HLO_FLOPs
+    roofline_fraction: float = 0.0  # MODEL_FLOPS-time / dominant-term time
+
+    def finalize(self) -> "Roofline":
+        chips = self.chips
+        self.t_compute = self.hlo_flops / (chips * hw.PEAK_FLOPS_BF16)
+        self.t_memory = self.napkin_bytes_est / (chips * hw.HBM_BW)
+        self.t_memory_hlo_upper = self.hlo_bytes / (chips * hw.HBM_BW)
+        self.t_collective = self.collective.get("total", 0.0) / (
+            chips * hw.ICI_BW_PER_LINK * hw.ICI_LINKS)
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_fraction = (self.model_flops / self.hlo_flops
+                                if self.hlo_flops else 0.0)
+        t_ideal = self.model_flops / (chips * hw.PEAK_FLOPS_BF16)
+        t_dom = max(terms.values())
+        self.roofline_fraction = t_ideal / t_dom if t_dom else 0.0
+        return self
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def napkin_bytes(cfg, shape, *, ring_cache: bool = False,
+                 param_bytes_each: float = 4.0) -> float:
+    """Fusion-aware analytic HBM traffic per step (global bytes).
+
+    The CPU-compiled "bytes accessed" is not representative of TPU traffic
+    (no bf16 fusion, remat recompute double-counted, loop rescale smears
+    non-loop bytes), so the headline memory term uses this napkin model and
+    the HLO figure is kept as an upper bound. Coefficients:
+
+    train:   params * 32 B  (f32 read fwd + read bwd + Adam p/m/v r+w)
+             + tokens*d*L*60 B  (bf16 activations fwd+bwd incl. remat ~1.5x)
+             + tokens*V*8 B     (f32 logits write + bwd read)
+    prefill: params * param_bytes_each + tokens*d*L*20 B + tokens*V*4 B
+    decode:  params * param_bytes_each + KV/SSM state traffic + logits.
+             ``ring_cache=True`` models the ring-buffer windowed cache
+             (reads min(T, window) instead of T for windowed layers).
+    """
+    counts = cfg.param_counts()
+    P_tot = counts["total"]
+    B, T = shape.global_batch, shape.seq_len
+    tokens = B * T
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+
+    if shape.kind == "train":
+        return P_tot * 32.0 + tokens * d * L * 60.0 + tokens * V * 8.0
+    if shape.kind == "prefill":
+        return (P_tot * param_bytes_each + tokens * d * L * 20.0
+                + tokens * V * 4.0)
+    # decode: one token per sequence
+    cache = 0.0
+    for desc in cfg.plan():
+        if desc.kind == "attn":
+            eff = min(T, desc.window) if (desc.window and ring_cache) else T
+            cache += B * cfg.n_kv_heads * eff * cfg.head_dim * 2 * 2.0
+        elif cfg.ssm_state:
+            d_inner = cfg.ssm_expand * d
+            H = d_inner // cfg.ssm_headdim
+            cache += 2.0 * B * H * cfg.ssm_headdim * cfg.ssm_state * 4.0
+    if cfg.enc_dec:
+        cache += B * cfg.enc_seq * d * 2.0 * cfg.n_layers  # cross-attn reads
+    return P_tot * param_bytes_each + cache + B * V * 4.0
+
+
+def model_flops(cfg, shape, last_logits: bool = False) -> float:
+    """Analytic useful FLOPs for the cell (per step).
+
+    train: 6 * N_active * tokens  (fwd 2x + bwd 4x)
+    prefill: 2 * N_active * tokens (+ attention quadratic term)
+    decode: 2 * N_active * batch   (one token per sequence; attention term
+            counts the KV-cache dot products)
+    """
+    counts = cfg.param_counts()
+    n_act = counts["active"] - counts.get("encoder", 0)
+    n_enc = counts.get("encoder", 0)
+    B, T = shape.global_batch, shape.seq_len
+
+    # attention FLOPs (QK^T + PV): 4 * tokens * ctx * d_head * heads,
+    # windowed layers use min(ctx, window)
+    def attn_flops(tokens_per_seq, ctx_len):
+        total = 0.0
+        for desc in cfg.plan():
+            if desc.kind != "attn":
+                continue
+            eff = min(ctx_len, desc.window) if desc.window else ctx_len
+            total += 4.0 * tokens_per_seq * eff * cfg.head_dim * cfg.n_heads
+        return total * B
+
+    if shape.kind == "train":
+        return (6.0 * n_act * B * T + 3.0 * attn_flops(T, T / 2)
+                + 6.0 * n_enc * B * cfg.enc_seq)
+    if shape.kind == "prefill":
+        emb = counts.get("embedding", 0)
+        if last_logits:   # unembed runs for one position per sequence
+            return (2.0 * (n_act - emb / 2) * B * T + attn_flops(T, T / 2)
+                    + 2.0 * n_enc * B * cfg.enc_seq + emb * B)
+        return (2.0 * n_act * B * T + attn_flops(T, T / 2)
+                + 2.0 * n_enc * B * cfg.enc_seq)
+    # decode: one new token against a T-long cache (encoder already ran)
+    return 2.0 * n_act * B * 1 + attn_flops(1, T)
+
+
+def analyze(arch, shape_name, mesh_name, *, chips, compiled, probe_lowered,
+            cfg, shape, bytes_per_device, ring_cache=False,
+            param_bytes_each=4.0, last_logits=False) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    raw_flops = float(ca.get("flops", 0.0))
+    raw_bytes = float(ca.get("bytes accessed", 0.0))
+    probe_ca = probe_lowered.cost_analysis() or {}
+    probe_flops = float(probe_ca.get("flops", raw_flops))
+    # spread loop-once bytes over trips proportionally to the flops ratio
+    ratio = probe_flops / raw_flops if raw_flops else 1.0
+    est_bytes = raw_bytes * max(ratio, 1.0)
+    coll = hlo_parse.collective_bytes(compiled.as_text())
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=probe_flops, hlo_flops_raw=raw_flops, hlo_bytes=est_bytes,
+        collective=coll,
+        model_flops=model_flops(cfg, shape, last_logits=last_logits),
+        bytes_per_device=bytes_per_device,
+        napkin_bytes_est=napkin_bytes(
+            cfg, shape, ring_cache=ring_cache,
+            param_bytes_each=param_bytes_each)).finalize()
+
+
+def rescore(rec: dict, *, probe_flops_new: float | None = None,
+            ring_cache: bool = False) -> dict:
+    """Recompute derived terms of a saved dry-run record (no recompile):
+    fresh probe FLOPs (if given) + napkin memory terms."""
+    from repro.configs.registry import get_config
+    from repro.configs.shapes import SHAPES
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    raw_flops = rec["hlo_flops_raw"]
+    pf = probe_flops_new if probe_flops_new is not None else rec["hlo_flops"]
+    ratio = pf / raw_flops if raw_flops else 1.0
+    raw_bytes = rec.get("cost_analysis", {}).get("bytes accessed",
+                                                 rec["hlo_bytes"])
+    roof = Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=rec["chips"], hlo_flops=pf, hlo_flops_raw=raw_flops,
+        hlo_bytes=raw_bytes * max(ratio, 1.0), collective=rec["collective"],
+        model_flops=model_flops(cfg, shape),
+        bytes_per_device=rec["bytes_per_device"],
+        napkin_bytes_est=napkin_bytes(cfg, shape,
+                                      ring_cache=ring_cache)).finalize()
+    out = dict(rec)
+    out.update(roof.to_json())
+    return out
+
+
+def save(results: list[Roofline], path: str):
+    with open(path, "w") as f:
+        json.dump([r.to_json() for r in results], f, indent=1)

@@ -1,0 +1,119 @@
+"""HLO-text analysis: collective-operand bytes (cost_analysis does not report
+them) and while-loop trip counts (XLA's cost analysis visits a while body
+ONCE — verified empirically on this jax build — so loop-carried work must be
+rescaled).
+
+Trip counts come from the ``backend_config={"known_trip_count":{"n":...}}``
+annotation XLA attaches to counted loops (condition-constant heuristic as
+fallback).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:[a-z][a-z0-9]*\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(" + "|".join(COLLECTIVES) + r")(-start|-done)?\(")
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=(%?[\w.\-]+),\s*body=(%?[\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> dict[str, str]:
+    """computation name -> body text (brace-depth scanner over lines)."""
+    comps: dict[str, str] = {}
+    cur_name, cur_lines, depth = None, [], 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur_name is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _HDR_RE.match(stripped)
+                if m:
+                    cur_name = m.group(1).lstrip("%")
+                    cur_lines = []
+                    depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        cur_lines.append(line)
+        if depth <= 0:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+    return comps
+
+
+def collective_ops_in(text: str):
+    """Yield (op, bytes) per collective instruction (async pairs counted
+    once, at the -start)."""
+    for m in _OP_RE.finditer(text):
+        type_str, op, async_suffix = m.group(1), m.group(2), m.group(3)
+        if async_suffix == "-done":
+            continue
+        yield op, shape_bytes(type_str)
+
+
+def _trip_counts(hlo: str) -> dict[str, int]:
+    """while body computation name -> known trip count."""
+    out: dict[str, int] = {}
+    for line in hlo.splitlines():
+        if "while(" not in line:
+            continue
+        m = _WHILE_RE.search(line)
+        if not m:
+            continue
+        body = m.group(2).lstrip("%")
+        t = _TRIP_RE.search(line)
+        tc = int(t.group(1)) if t else 1
+        out[body] = max(out.get(body, 1), tc)
+    return out
+
+
+def collective_bytes(hlo: str) -> dict[str, float]:
+    """Total collective-operand bytes by op kind (+"total"), while-body ops
+    scaled by their loop trip count."""
+    comps = split_computations(hlo)
+    trips = _trip_counts(hlo)
+    totals: dict[str, float] = defaultdict(float)
+    for name, body in comps.items():
+        scale = trips.get(name, 1)
+        for op, b in collective_ops_in(body):
+            totals[op] += b * scale
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return dict(totals)
+
+
+def loop_flops_correction(hlo: str, comp_flops_fn=None) -> float:
+    """Multiplier correcting cost_analysis FLOPs for the dominant counted
+    loop. For our stacks the layer scan holds ~all FLOPs, so scaling total
+    FLOPs by the scan trip count is accurate to the (tiny) non-loop part.
+    Returns max trip count (1 if no loops)."""
+    trips = _trip_counts(hlo)
+    return float(max(trips.values())) if trips else 1.0
+
+
+def trip_counts(hlo: str) -> dict[str, int]:
+    return _trip_counts(hlo)

@@ -1,0 +1,51 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DEVICES", "8"))
+"""Rescore saved dry-run records: fresh FLOP probes (fixing the moe_groups
+probe bug without recompiling the 512-way cells) + napkin memory terms.
+
+    PYTHONPATH=src python -m repro.roofline.rescore experiments/dryrun
+"""
+import json
+import pathlib
+import sys
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES
+from repro.roofline import analysis
+
+
+def main(dirpath: str, reprobe_all: bool = False):
+    from repro.launch.dryrun import probe_flops
+    d = pathlib.Path(dirpath)
+    probe_cache: dict[tuple, float] = {}
+    for p in sorted(d.glob("*.json")):
+        if p.stem.startswith("gp_"):
+            continue
+        rec = json.load(open(p))
+        if rec.get("status") != "ok" or "arch" not in rec:
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        chips = rec["chips"]
+        # production DP product: single 16 (of 256=16x16), multi 32 (2x16x16)
+        mg = 32 if rec["mesh"] == "multi" else 16
+        needs_probe = reprobe_all or bool(cfg.moe_experts)
+        pf = None
+        if needs_probe:
+            key = (rec["arch"], rec["shape"], mg)
+            if key not in probe_cache:
+                probe_cache[key] = probe_flops(cfg, shape, shape.kind,
+                                               moe_groups=mg)
+            pf = probe_cache[key]
+        new = analysis.rescore(rec, probe_flops_new=pf)
+        json.dump(new, open(p, "w"), indent=1)
+        print(p.stem, f"useful={new['useful_fraction']:.2f}",
+              f"bottleneck={new['bottleneck']}",
+              f"roofline={new['roofline_fraction']:.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun",
+         reprobe_all="--reprobe-all" in sys.argv)

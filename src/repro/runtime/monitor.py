@@ -1,0 +1,98 @@
+"""Runtime monitoring: heartbeats, failure detection, throughput metrics.
+
+The fault-tolerance math (runtime/fault.py) needs a DETECTOR to drive it.
+This module provides the control-plane piece: machines report heartbeats
+(in simulation, a latency/crash model generates them); the detector flags
+machines whose heartbeat age exceeds the timeout and emits fail/recover
+events that the caller applies to the ClusterState (fault.fail /
+fault.recover_reassign). Also tracks step timing and EMA throughput the way
+a training-loop babysitter would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class MachineStatus:
+    last_heartbeat: float
+    alive: bool = True
+    failures: int = 0
+
+
+class FailureDetector:
+    """Heartbeat-timeout failure detector (phi-accrual simplified)."""
+
+    def __init__(self, n_machines: int, *, timeout: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        now = clock()
+        self.machines = {m: MachineStatus(now) for m in range(n_machines)}
+
+    def heartbeat(self, machine: int) -> None:
+        st = self.machines[machine]
+        st.last_heartbeat = self.clock()
+        if not st.alive:
+            st.alive = True          # recovered
+
+    def sweep(self) -> list[int]:
+        """Returns machines newly declared failed."""
+        now = self.clock()
+        newly = []
+        for m, st in self.machines.items():
+            if st.alive and now - st.last_heartbeat > self.timeout:
+                st.alive = False
+                st.failures += 1
+                newly.append(m)
+        return newly
+
+    @property
+    def alive_mask(self) -> list[bool]:
+        return [self.machines[m].alive for m in sorted(self.machines)]
+
+
+@dataclasses.dataclass
+class StepMetrics:
+    step: int = 0
+    tokens_per_s: float = 0.0
+    step_time_ema: float = 0.0
+    loss_ema: float = 0.0
+
+
+class TrainMonitor:
+    """EMA step timing / throughput / loss tracking + stall detection."""
+
+    def __init__(self, *, tokens_per_step: int, ema: float = 0.9,
+                 stall_factor: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.tokens = tokens_per_step
+        self.ema = ema
+        self.stall_factor = stall_factor
+        self.clock = clock
+        self._last: Optional[float] = None
+        self.metrics = StepMetrics()
+
+    def step(self, loss: float) -> StepMetrics:
+        now = self.clock()
+        m = self.metrics
+        if self._last is not None:
+            dt = now - self._last
+            m.step_time_ema = (self.ema * m.step_time_ema
+                               + (1 - self.ema) * dt
+                               if m.step_time_ema else dt)
+            m.tokens_per_s = self.tokens / max(m.step_time_ema, 1e-9)
+        self._last = now
+        m.loss_ema = (self.ema * m.loss_ema + (1 - self.ema) * loss
+                      if m.step != 0 else loss)
+        m.step = m.step + 1
+        return m
+
+    def is_stalled(self) -> bool:
+        """True when no step completed within stall_factor x EMA time."""
+        if self._last is None or not self.metrics.step_time_ema:
+            return False
+        return (self.clock() - self._last
+                > self.stall_factor * self.metrics.step_time_ema)

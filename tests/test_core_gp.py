@@ -1,0 +1,95 @@
+"""Exact-GP + covariance behaviour and property-based invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import covariance as cov, gp, linalg
+
+from helpers import make_problem
+
+
+class TestCovariance:
+    def test_symmetry_and_diag(self):
+        p = make_problem()
+        K = p["kfn"](p["params"], p["X"], p["X"])
+        np.testing.assert_allclose(K, K.T, atol=1e-12)
+        np.testing.assert_allclose(jnp.diag(K),
+                                   cov.signal_var(p["params"]), atol=1e-12)
+
+    def test_psd(self):
+        p = make_problem()
+        K = cov.add_noise(p["kfn"](p["params"], p["X"], p["X"]), p["params"])
+        w = jnp.linalg.eigvalsh(K)
+        assert float(w.min()) > 0
+
+    @pytest.mark.parametrize("name", ["se", "matern52", "rq"])
+    def test_kdiag_matches_dense(self, name):
+        p = make_problem()
+        kfn = cov.make_kernel(name)
+        d1 = cov.kdiag(kfn, p["params"], p["X"])
+        d2 = jnp.diag(kfn(p["params"], p["X"], p["X"]))
+        np.testing.assert_allclose(d1, d2, atol=1e-10)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), d=st.integers(1, 6),
+           ls=st.floats(0.3, 5.0))
+    def test_property_cauchy_schwarz(self, seed, d, ls):
+        """|k(x,x')| <= signal_var for SE (correlation bounded by 1)."""
+        key = jax.random.PRNGKey(seed)
+        X = jax.random.normal(key, (20, d), jnp.float64)
+        params = cov.init_params(d, signal=1.7, lengthscale=ls,
+                                 dtype=jnp.float64)
+        K = cov.se_ard(params, X, X)
+        assert float(jnp.abs(K).max()) <= float(cov.signal_var(params)) + 1e-9
+
+
+class TestFullGP:
+    def test_interpolates_with_small_noise(self):
+        p = make_problem(noise=1e-4)
+        post = gp.predict(p["kfn"], p["params"], p["X"], p["y"], p["X"][:10])
+        np.testing.assert_allclose(post.mean, p["y"][:10], atol=1e-2)
+
+    def test_posterior_variance_below_prior(self):
+        p = make_problem()
+        post = gp.predict(p["kfn"], p["params"], p["X"], p["y"], p["U"])
+        prior = cov.signal_var(p["params"])
+        assert float(post.var.max()) <= float(prior) + 1e-9
+        assert float(post.var.min()) >= 0.0
+
+    def test_diag_only_matches_dense(self):
+        p = make_problem()
+        a = gp.predict(p["kfn"], p["params"], p["X"], p["y"], p["U"])
+        b = gp.predict(p["kfn"], p["params"], p["X"], p["y"], p["U"],
+                       diag_only=True)
+        np.testing.assert_allclose(b.var, a.var, atol=1e-9)
+
+    def test_nlml_grad_finite(self):
+        p = make_problem()
+        g = jax.grad(lambda th: gp.nlml(p["kfn"], th, p["X"], p["y"]))(
+            p["params"])
+        for leaf in jax.tree.leaves(g):
+            assert bool(jnp.isfinite(leaf).all())
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_property_more_data_lowers_variance(self, seed):
+        """Conditioning on more observations cannot raise predictive var."""
+        p = make_problem(seed=seed)
+        v1 = gp.predict(p["kfn"], p["params"], p["X"][:32], p["y"][:32],
+                        p["U"]).var
+        v2 = gp.predict(p["kfn"], p["params"], p["X"], p["y"], p["U"]).var
+        assert float((v2 - v1).max()) < 1e-6
+
+
+class TestLinalg:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), n=st.integers(2, 40))
+    def test_property_psd_solve_roundtrip(self, seed, n):
+        A = jax.random.normal(jax.random.PRNGKey(seed), (n, n), jnp.float64)
+        K = A @ A.T + jnp.eye(n)
+        B = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 3),
+                              jnp.float64)
+        X = linalg.psd_solve(K, B, jitter=0.0)
+        np.testing.assert_allclose(K @ X, B, atol=1e-7)

@@ -1,0 +1,115 @@
+"""Launcher-level integration: sharded train/serve step builders on a real
+multi-device mesh (subprocess, 8 host devices) + eager smoke on 1 device."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = r"""
+import jax, jax.numpy as jnp
+assert len(jax.devices()) == 8
+from repro.configs.registry import smoke_config
+from repro.data.loader import TokenLoader
+from repro.launch import serve as serve_lib, train as train_lib
+from repro.models import transformer as tf
+from repro.optim.adam import Adam
+from repro.parallel import sharding as shd
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+# --- sharded training: mixtral-family smoke (MoE + FSDP + TP + EP path)
+cfg = smoke_config("mixtral-8x22b").scaled(moe_dispatch="gather")
+opt = Adam(lr=1e-3)
+state = train_lib.init_state(jax.random.PRNGKey(0), cfg, opt)
+step_fn, jitted = train_lib.make_train_step(cfg, mesh, opt,
+                                            attn_impl="jnp", remat=True)
+jstep = jitted(state)
+loader = TokenLoader(cfg, mesh, batch=8, seq=32)
+losses = []
+for _ in range(3):
+    state, m = jstep(state, next(loader))
+    losses.append(float(m.loss))
+assert all(jnp.isfinite(jnp.asarray(losses))), losses
+assert losses[-1] < losses[0] + 0.5, losses
+
+# --- sharded serving: decode step with KV caches on the mesh
+cfg2 = smoke_config("qwen3-1.7b")
+params = tf.init_model(jax.random.PRNGKey(1), cfg2)
+B = 8
+sstate = tf.init_serve(cfg2, B, 64)
+step, jitted2 = serve_lib.make_serve_step(cfg2, mesh, batch=B)
+jdecode = jitted2(params)
+tok = jnp.zeros((B, 1), jnp.int32)
+logits, sstate = jdecode(params, tok, sstate)
+assert logits.shape == (B, 1, cfg2.vocab_padded)
+logits2, sstate = jdecode(params, tok, sstate)
+assert bool(jnp.isfinite(logits2).all())
+print("LAUNCH_OK")
+"""
+
+
+def test_sharded_train_and_serve_on_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-4000:]
+    assert "LAUNCH_OK" in r.stdout
+
+
+def test_eager_train_step_all_families():
+    """One eager train step per family on one device (fast coverage of the
+    builder across attention/MoE/SSM/enc-dec paths)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import smoke_config
+    from repro.launch import train as train_lib
+    from repro.optim.adam import Adam
+
+    for name in ("olmo-1b", "qwen3-moe-30b-a3b", "mamba2-130m",
+                 "whisper-medium"):
+        cfg = smoke_config(name)
+        opt = Adam(lr=1e-3)
+        state = train_lib.init_state(jax.random.PRNGKey(0), cfg, opt)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  cfg.vocab)
+        batch = {"tokens": toks, "labels": toks}
+        if cfg.enc_dec:
+            batch["frames"] = jax.random.normal(
+                jax.random.PRNGKey(2), (2, cfg.enc_seq, cfg.d_model),
+                jnp.bfloat16)
+        step_fn, _ = train_lib.make_train_step(cfg, None, opt,
+                                               attn_impl="jnp", remat=False)
+        state, m = step_fn(state, batch)
+        assert bool(jnp.isfinite(m.loss)), name
+
+
+def test_microbatched_matches_single_batch():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.registry import smoke_config
+    from repro.launch import train as train_lib
+    from repro.optim.adam import Adam
+
+    cfg = smoke_config("olmo-1b")
+    opt = Adam(lr=1e-3)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    s1 = train_lib.init_state(jax.random.PRNGKey(0), cfg, opt)
+    s2 = train_lib.init_state(jax.random.PRNGKey(0), cfg, opt)
+    f1, _ = train_lib.make_train_step(cfg, None, opt, attn_impl="jnp",
+                                      remat=False, microbatches=1)
+    f2, _ = train_lib.make_train_step(cfg, None, opt, attn_impl="jnp",
+                                      remat=False, microbatches=2)
+    s1, m1 = f1(s1, batch)
+    s2, m2 = f2(s2, batch)
+    # same data, same update (up to accumulation-order roundoff; Adam's
+    # m/sqrt(v) normalization amplifies bf16 rounding of near-zero grads to
+    # +-lr on isolated elements, so compare loss tightly and params by
+    # mismatch fraction)
+    np.testing.assert_allclose(float(m1.loss), float(m2.loss), rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        frac = float(jnp.mean((jnp.abs(a - b) > 2e-5).astype(jnp.float32)))
+        assert frac < 0.01, frac

@@ -1,0 +1,119 @@
+"""Coverage for remaining feature corners: true multimodal M-RoPE positions,
+last-logits prefill, report rendering, napkin model, HLO parser units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, smoke_config
+from repro.configs.shapes import SHAPES, applicable
+from repro.models import layers, transformer as tf
+from repro.roofline import analysis, hlo_parse
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestMRoPE:
+    def test_distinct_spatial_positions_change_output(self):
+        """Vision tokens with distinct (t,h,w) ids must differ from text
+        rope (the sections actually do something)."""
+        x = jax.random.normal(KEY, (1, 2, 8, 32))
+        pos_t = jnp.broadcast_to(jnp.arange(8)[None], (1, 8))
+        pos3_text = jnp.broadcast_to(pos_t[:, None], (1, 3, 8))
+        grid = jnp.stack([jnp.zeros((1, 8)),                 # same frame
+                          jnp.repeat(jnp.arange(4), 2)[None],  # row ids
+                          jnp.tile(jnp.arange(2), 4)[None]],   # col ids
+                         axis=1)
+        a = layers.apply_mrope(x, pos3_text, 1e4, sections=(4, 6, 6))
+        b = layers.apply_mrope(x, grid, 1e4, sections=(4, 6, 6))
+        assert float(jnp.abs(a - b).max()) > 1e-3
+
+    def test_vlm_forward_with_image_grid_positions(self):
+        cfg = smoke_config("qwen2-vl-72b")
+        params = tf.init_model(KEY, cfg)
+        B, T = 1, 16
+        toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+        # first 8 tokens are a 2x4 image patch grid, rest is text
+        t_id = jnp.concatenate([jnp.zeros(8), jnp.arange(1, 9)])
+        h_id = jnp.concatenate([jnp.repeat(jnp.arange(2), 4),
+                                jnp.arange(1, 9)])
+        w_id = jnp.concatenate([jnp.tile(jnp.arange(4), 2),
+                                jnp.arange(1, 9)])
+        pos3 = jnp.stack([t_id, h_id, w_id])[None].astype(jnp.int32)
+        logits, _ = tf.forward(params, toks, cfg, positions=pos3,
+                               attn_impl="jnp")
+        assert bool(jnp.isfinite(logits).all())
+
+
+class TestLastLogitsPrefill:
+    def test_matches_full_forward_last_position(self):
+        cfg = smoke_config("qwen3-1.7b")
+        params = tf.init_model(KEY, cfg)
+        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+        full, _ = tf.forward(params, toks, cfg, attn_impl="jnp",
+                             compute_dtype=jnp.float32)
+        last, _ = tf.forward(params, toks, cfg, attn_impl="jnp",
+                             compute_dtype=jnp.float32,
+                             logits_last_only=True)
+        assert last.shape[1] == 1
+        np.testing.assert_allclose(last[:, 0], full[:, -1], atol=1e-5)
+
+
+class TestRooflineUnits:
+    def test_shape_bytes(self):
+        assert hlo_parse.shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+        assert hlo_parse.shape_bytes("(bf16[4,4], s8[16])") == 32 + 16
+        assert hlo_parse.shape_bytes("pred[]") == 1
+
+    def test_collective_bytes_with_trip_count(self):
+        hlo = """
+HloModule m
+%body (x: f32[4]) -> f32[4] {
+  %ar = f32[4]{0} all-reduce(%x), replica_groups={}
+}
+%cond (x: f32[4]) -> pred[] {
+  %c = s32[] constant(7)
+}
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %w = f32[4]{0} while(%p), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  %ag = f32[8]{0} all-gather(%w)
+}
+"""
+        out = hlo_parse.collective_bytes(hlo)
+        assert out["all-reduce"] == 7 * 16
+        assert out["all-gather"] == 32
+        assert out["total"] == 7 * 16 + 32
+
+    def test_model_flops_windowed_less_than_full(self):
+        cfg_g = get_config("gemma3-4b")
+        shape = SHAPES["prefill_32k"]
+        windowed = analysis.model_flops(cfg_g, shape)
+        nowin = analysis.model_flops(
+            cfg_g.scaled(layer_pattern=(
+                cfg_g.layer_pattern[-1],)), shape)  # all-global variant
+        assert windowed < nowin
+
+    def test_napkin_ring_cache_reduces_decode_bytes(self):
+        cfg = get_config("gemma3-4b")
+        shape = SHAPES["long_500k"]
+        full = analysis.napkin_bytes(cfg, shape, ring_cache=False)
+        ring = analysis.napkin_bytes(cfg, shape, ring_cache=True)
+        assert ring < full / 2
+
+    def test_applicability_matrix(self):
+        assert applicable("mamba2-130m", "long_500k")
+        assert not applicable("qwen3-1.7b", "long_500k")
+        assert applicable("qwen3-1.7b", "train_4k")
+
+
+class TestReport:
+    def test_table_renders(self, tmp_path):
+        import json
+        rec = {"status": "ok", "mesh": "single", "arch": "a", "shape": "s",
+               "chips": 4, "t_compute": 0.5, "t_memory": 0.001,
+               "t_collective": 2e-6, "bottleneck": "compute",
+               "useful_fraction": 0.9, "roofline_fraction": 0.85}
+        json.dump(rec, open(tmp_path / "a_s_single.json", "w"))
+        from repro.roofline.report import table
+        out = table(str(tmp_path), "single")
+        assert "| a | s | 4 | 500.0ms | 1.0ms | 2us | compute | 0.90 | "
+        assert "0.850" in out

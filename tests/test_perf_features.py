@@ -1,0 +1,157 @@
+"""Regression tests for the §Perf optimizations — each must be numerically
+equivalent to its baseline (the hillclimb keeps correctness by construction)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LayerDesc
+from repro.configs.registry import smoke_config
+from repro.models import moe as moe_lib, transformer as tf
+from repro.parallel import sharding as shd
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestGatherDispatch:
+    def test_matches_einsum_dispatch(self):
+        p = moe_lib.init_moe(KEY, 16, 32, 4)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 16))
+        for G in (1, 4):
+            y1, _ = moe_lib.moe_ffn(p, x, top_k=2, capacity_factor=16.0,
+                                    n_groups=G, compute_dtype=jnp.float32)
+            y2, _ = moe_lib.moe_ffn(p, x, top_k=2, capacity_factor=16.0,
+                                    n_groups=G, dispatch="gather",
+                                    compute_dtype=jnp.float32)
+            np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+    def test_capacity_drops_counted(self):
+        p = moe_lib.init_moe(KEY, 16, 32, 8)
+        x = jax.random.normal(KEY, (1, 64, 16))
+        y, aux = moe_lib.moe_ffn(p, x, top_k=2, capacity_factor=0.25,
+                                 dispatch="gather",
+                                 compute_dtype=jnp.float32)
+        assert float(aux.dropped_fraction) > 0.0
+        assert bool(jnp.isfinite(y).all())
+
+    def test_grad_flows(self):
+        p = moe_lib.init_moe(KEY, 8, 16, 4)
+        x = jax.random.normal(KEY, (1, 16, 8))
+        g = jax.grad(lambda pp: moe_lib.moe_ffn(
+            pp, x, top_k=2, dispatch="gather",
+            compute_dtype=jnp.float32)[0].sum())(p)
+        assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+        assert float(jnp.abs(g["w_in"]).max()) > 0
+
+
+class TestRingCache:
+    def test_ring_matches_full_cache(self):
+        cfg = smoke_config("gemma3-4b")
+        pat = tuple(dataclasses.replace(d, window=8 if d.window else None)
+                    for d in cfg.layer_pattern)
+        cfg = cfg.scaled(layer_pattern=pat)
+        params = tf.init_model(KEY, cfg)
+        B, T = 2, 24
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                  cfg.vocab)
+        s_full = tf.init_serve(cfg, B, 64, cache_dtype=jnp.float32)
+        s_ring = tf.init_serve(cfg, B, 64, cache_dtype=jnp.float32,
+                               ring_cache=True)
+        # ring caches for windowed layers are window-sized
+        assert s_ring.stack_caches[0].k.shape[3] == 8
+        assert s_full.stack_caches[0].k.shape[3] == 64
+        for t in range(T):
+            lf, s_full = tf.decode_step(params, toks[:, t:t + 1], s_full,
+                                        cfg, compute_dtype=jnp.float32)
+            lr, s_ring = tf.decode_step(params, toks[:, t:t + 1], s_ring,
+                                        cfg, compute_dtype=jnp.float32)
+            assert float(jnp.abs(lf - lr).max()) < 1e-4, t
+
+
+class TestCrossKVPrecompute:
+    def test_matches_recompute_path(self):
+        cfg = smoke_config("whisper-medium")
+        params = tf.init_model(KEY, cfg)
+        B, T = 2, 10
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                  cfg.vocab)
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (B, cfg.enc_seq, cfg.d_model),
+                                   jnp.float32)
+        enc = tf.encode(params, frames, cfg, compute_dtype=jnp.float32)
+        s1 = tf.init_serve(cfg, B, 32, enc_kv=enc, cache_dtype=jnp.float32)
+        ckv = tf.precompute_cross_kv(params, enc, cfg,
+                                     compute_dtype=jnp.float32)
+        s2 = tf.init_serve(cfg, B, 32, enc_kv=None,
+                           cache_dtype=jnp.float32)._replace(cross_kv=ckv)
+        for t in range(T):
+            l1, s1 = tf.decode_step(params, toks[:, t:t + 1], s1, cfg,
+                                    compute_dtype=jnp.float32)
+            l2, s2 = tf.decode_step(params, toks[:, t:t + 1], s2, cfg,
+                                    compute_dtype=jnp.float32)
+            assert float(jnp.abs(l1 - l2).max()) < 1e-4
+
+
+class TestVocabPadding:
+    def test_padded_table_same_loss_semantics(self):
+        """Padded logits columns are masked: loss over real labels matches a
+        manually padded-free computation."""
+        cfg = smoke_config("olmo-1b").scaled(vocab=250)   # pads to 256
+        assert cfg.vocab_padded == 256
+        params = tf.init_model(KEY, cfg)
+        assert params["embed"]["tok"].shape[0] == 256
+        toks = jax.random.randint(KEY, (2, 16), 0, 250)
+        logits, _ = tf.forward(params, toks, cfg, attn_impl="jnp")
+        assert logits.shape[-1] == 256
+        assert float(logits[..., 250:].max()) <= -1e29
+        loss, _ = tf.lm_loss(params, toks, toks, cfg, attn_impl="jnp")
+        assert bool(jnp.isfinite(loss))
+
+    def test_argmax_never_selects_padding(self):
+        cfg = smoke_config("qwen3-1.7b").scaled(vocab=250)
+        params = tf.init_model(KEY, cfg)
+        toks = jax.random.randint(KEY, (4, 8), 0, 250)
+        logits, _ = tf.forward(params, toks, cfg, attn_impl="jnp")
+        assert int(jnp.argmax(logits, -1).max()) < 250
+
+
+class TestShardingPolicy:
+    def _mesh(self):
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_small_model_replicates(self):
+        cfg = smoke_config("olmo-1b")
+        params = jax.eval_shape(lambda: tf.init_model(KEY, cfg))
+        assert not shd.use_tp_policy(params)
+        specs = shd.param_specs(params, self._mesh())
+        from jax.sharding import PartitionSpec as P
+        for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+            assert all(a is None for a in s)
+
+    def test_large_model_uses_tp(self):
+        from repro.configs.registry import get_config
+        cfg = get_config("qwen3-1.7b")          # ~2 GB params > threshold
+        params = jax.eval_shape(lambda: tf.init_model(KEY, cfg))
+        assert shd.use_tp_policy(params)
+
+    def test_moe_expert_weights_fully_sharded(self):
+        """The §Perf expert-sharding fix: 4-D stacked expert weights shard
+        both d and ff (or E), never leaving a big dim replicated."""
+        from repro.configs.registry import get_config
+        cfg = get_config("mixtral-8x22b")
+        mesh = self._mesh()     # (1,1): every dim divides -> full rule path
+        params = jax.eval_shape(lambda: tf.init_model(KEY, cfg))
+        specs = shd.param_specs(params, mesh, use_tp=True)
+        s = specs["stack"][0]["moe"]["w_in"]     # (L, E, d, ff)
+        # either EP (experts sharded + d on dp) or TP-in-expert (d + ff):
+        # at least two of the three trailing dims must be sharded
+        assert sum(x is not None for x in s[1:]) >= 2, s
+
+    def test_batch_spec_divisibility_fallback(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        from jax.sharding import PartitionSpec as P
+        spec = shd.batch_spec(mesh, use_tp=False, batch=3)
+        # batch=3 cannot shard 2 ways -> axes dropped as needed
+        assert isinstance(spec, P)

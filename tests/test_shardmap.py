@@ -1,0 +1,69 @@
+"""Multi-device shard_map coverage.
+
+Runs in a subprocess with XLA_FLAGS forcing 8 host devices (the flag must not
+leak into this process — smoke tests need the real single device), comparing
+every parallel method's shard_map execution against the vmap simulation.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = r"""
+import jax, jax.numpy as jnp
+jax.config.update("jax_enable_x64", True)
+assert len(jax.devices()) == 8, jax.devices()
+from repro.core import covariance as cov, ppitc, ppic, picf, support, hyper
+from repro.parallel.runner import ShardMapRunner, VmapRunner
+
+mesh = jax.make_mesh((8,), ("data",))
+sm = ShardMapRunner(mesh=mesh, axis_name="data")
+vm = VmapRunner(M=8)
+key = jax.random.PRNGKey(0)
+n, u, s, d = 128, 32, 12, 3
+X = jax.random.normal(key, (n, d))
+S = jax.random.normal(jax.random.PRNGKey(1), (s, d))
+U = jax.random.normal(jax.random.PRNGKey(2), (u, d))
+params = cov.init_params(d, signal=1.3, noise=0.3, lengthscale=1.5,
+                         dtype=jnp.float64)
+kfn = cov.make_kernel("se")
+y = jnp.sin(X[:, 0]) * 2 + X[:, 1] + 0.1 * jax.random.normal(
+    jax.random.PRNGKey(3), (n,))
+
+def close(a, b, tol=1e-10):
+    assert float(jnp.abs(a - b).max()) < tol, float(jnp.abs(a - b).max())
+
+a, b = ppitc.predict(kfn, params, S, X, y, U, sm), \
+    ppitc.predict(kfn, params, S, X, y, U, vm)
+close(a.mean, b.mean); close(a.blocks, b.blocks)
+a, b = ppic.predict(kfn, params, S, X, y, U, sm), \
+    ppic.predict(kfn, params, S, X, y, U, vm)
+close(a.mean, b.mean); close(a.blocks, b.blocks)
+a, b = picf.predict(kfn, params, X, y, U, 48, sm), \
+    picf.predict(kfn, params, X, y, U, 48, vm)
+close(a.mean, b.mean); close(a.cov, b.cov)
+a, b = picf.predict(kfn, params, X, y, U, 48, sm, shard_u=True), \
+    picf.predict(kfn, params, X, y, U, 48, vm, shard_u=True)
+close(a.mean, b.mean); close(a.blocks, b.blocks)
+close(support.select_support_parallel(kfn, params, X, 8, sm),
+      support.select_support_parallel(kfn, params, X, 8, vm))
+close(hyper.pitc_nlml(kfn, params, S, X, y, sm),
+      hyper.pitc_nlml(kfn, params, S, X, y, vm), 1e-8)
+
+# two-axis machines: ("pod", "data") as in the production mesh
+mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+sm2 = ShardMapRunner(mesh=mesh2, axis_name=("pod", "data"))
+a = ppic.predict(kfn, params, S, X, y, U, sm2)
+close(a.mean, ppic.predict(kfn, params, S, X, y, U, vm).mean)
+print("SHARD_MAP_OK")
+"""
+
+
+def test_shard_map_matches_vmap_on_8_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "SHARD_MAP_OK" in r.stdout
