@@ -1,0 +1,110 @@
+"""Real-time serving: cold one-shot prediction vs amortized cached-state
+prediction vs batch size (core/api.py + launch/gp_serve.py).
+
+What the paper's real-time claim cashes out to in this codebase:
+
+* cold       — the legacy one-shot path (``ppitc.predict``): every call
+  redoes the O((|D|/M)^3) local summaries and |S|^3 solves;
+* fit        — one-time cost of building the cached ``PosteriorState``;
+* amortized  — jitted ``predict_batch_diag`` over the cached state:
+  O(|U||S| + |S|^2) per call, the per-query latency a serving deployment
+  actually pays, swept over microbatch sizes.
+
+Acceptance gate (full size, vmap runner, CPU): amortized repeated-query
+prediction must be >= 5x faster than the cold path at n=4096, M=8, with
+posteriors matching the legacy path to allclose(rtol=1e-5). The gate is
+asserted here so `python -m benchmarks.run --only serve` fails loudly on a
+caching regression.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, covariance as cov, ppitc, support
+from repro.data import synthetic
+from repro.launch.gp_serve import GPServer
+from repro.parallel.runner import VmapRunner
+
+from benchmarks import common
+
+N, M, S_SIZE = 4096, 8, 128
+BATCHES = (1, 8, 64, 256)
+SPEEDUP_GATE = 5.0
+
+
+def run(quick: bool = False, smoke: bool = False):
+    n = 512 if smoke else (2048 if quick else N)
+    s_size = 32 if smoke else S_SIZE
+    batches = (1, 8) if smoke else BATCHES
+    key = jax.random.PRNGKey(0)
+    ds = synthetic.standardize(synthetic.aimpeak_like(key, n=n, n_test=256))
+    kfn = cov.make_kernel("se")
+    params = cov.init_params(ds.X.shape[1], signal=1.0, noise=0.3,
+                             lengthscale=1.2, dtype=jnp.float32)
+    S = support.select_support(kfn, params, ds.X[:min(n, 2048)], s_size)
+    runner = VmapRunner(M=M)
+    Uq = ds.X_test[:64]
+
+    # --- cold path: one-shot predict redoes the whole fit per call --------
+    cold_fn = jax.jit(lambda: ppitc.predict(kfn, params, S, ds.X, ds.y, Uq,
+                                            runner).mean)
+    t_cold = common.timeit(cold_fn)
+    common.emit(f"serve/cold_fit_predict/n{n}", t_cold, f"u={Uq.shape[0]}")
+
+    # --- fit once, cache the state -----------------------------------------
+    fit_fn = jax.jit(lambda: ppitc.fit(kfn, params, ds.X, ds.y, S=S,
+                                       runner=runner))
+    t_fit = common.timeit(lambda: jax.tree.leaves(fit_fn())[0])
+    common.emit(f"serve/fit_once/n{n}", t_fit, "state build (amortized away)")
+    state = fit_fn()
+
+    # --- amortized path: jitted predict over the cached state --------------
+    predict_fn = jax.jit(partial(ppitc.predict_batch_diag, kfn))
+    t_amort = common.timeit(lambda: predict_fn(params, state, Uq)[0])
+    speedup = t_cold / max(t_amort, 1e-9)
+    common.emit(f"serve/amortized/n{n}", t_amort,
+                f"u={Uq.shape[0]};speedup={speedup:.1f}x")
+
+    # --- correctness: cached path matches the legacy one-shot posterior ----
+    # float32 perf-path sanity (atol floor = fp32 accumulation noise) ...
+    legacy = ppitc.predict(kfn, params, S, ds.X, ds.y, Uq, runner)
+    mean, var = predict_fn(params, state, Uq)
+    assert jnp.allclose(mean, legacy.mean, rtol=1e-5, atol=1e-5), \
+        float(jnp.abs(mean - legacy.mean).max())
+    assert jnp.allclose(var, legacy.var, rtol=1e-4, atol=1e-5), \
+        float(jnp.abs(var - legacy.var).max())
+    # ... and the strict rtol=1e-5 gate where it is meaningful: float64
+    with jax.experimental.enable_x64():
+        f64 = lambda a: jnp.asarray(a, jnp.float64)
+        p64 = jax.tree.map(f64, params)
+        X64, y64, S64, U64 = map(f64, (ds.X, ds.y, S, Uq))
+        legacy64 = ppitc.predict(kfn, p64, S64, X64, y64, U64, runner)
+        st64 = ppitc.fit(kfn, p64, X64, y64, S=S64, runner=runner)
+        m64, v64 = ppitc.predict_batch_diag(kfn, p64, st64, U64)
+        assert jnp.allclose(m64, legacy64.mean, rtol=1e-5), \
+            float(jnp.abs(m64 - legacy64.mean).max())
+        assert jnp.allclose(v64, legacy64.var, rtol=1e-5), \
+            float(jnp.abs(v64 - legacy64.var).max())
+
+    if not (quick or smoke):
+        assert speedup >= SPEEDUP_GATE, \
+            f"amortized speedup {speedup:.1f}x < {SPEEDUP_GATE}x gate"
+
+    # --- per-query latency vs microbatch size (through the server) ---------
+    model = api.FittedGP(api.get("ppitc"), kfn, params, state)
+    srv = GPServer(model, max_batch=max(batches))
+    for u in batches:
+        Ub = ds.X_test[:u]
+        t = common.timeit(lambda: srv.predict(Ub)[0])
+        common.emit(f"serve/batch{u}/n{n}", t,
+                    f"per_query_us={t / u:.1f}")
+
+    return speedup
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

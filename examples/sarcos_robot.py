@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.core import covariance as cov, hyper, online, picf, ppic, support
+from repro.core import api, covariance as cov, hyper, online, support
 from repro.data import synthetic
 from repro.parallel.runner import VmapRunner
 from repro.runtime import fault
@@ -54,16 +54,18 @@ def main():
     S = support.select_support_parallel(kfn, params, ds.X[:1024],
                                         args.support, runner)
 
-    # --- pPIC --------------------------------------------------------------
-    post = ppic.predict(kfn, params, S, ds.X, ds.y, ds.X_test, runner)
-    print(f"pPIC : rmse={rmse(post.mean):.4f} "
-          f"mnlp={mnlp(post.mean, post.var, ds.y_test):.3f}")
+    # --- pPIC: fit once, predict from the cached PosteriorState ------------
+    model = api.fit("ppic", kfn, params, ds.X, ds.y, S=S, runner=runner)
+    mean, var = model.predict_diag(ds.X_test)
+    print(f"pPIC : rmse={rmse(mean):.4f} "
+          f"mnlp={mnlp(mean, var, ds.y_test):.3f}")
 
     # --- pICF-based GP (paper Sec. 4; R ~ 2x|S| per Sec. 6) ----------------
-    posti = picf.predict(kfn, params, ds.X, ds.y, ds.X_test, args.rank,
-                         runner, shard_u=True)
-    print(f"pICF : rmse={rmse(posti.mean):.4f} "
-          f"mnlp={mnlp(posti.mean, posti.var, ds.y_test):.3f}")
+    modeli = api.fit("picf", kfn, params, ds.X, ds.y, rank=args.rank,
+                     runner=runner)
+    meani, vari = modeli.predict_diag(ds.X_test)
+    print(f"pICF : rmse={rmse(meani):.4f} "
+          f"mnlp={mnlp(meani, vari, ds.y_test):.3f}")
 
     # --- checkpoint the summary store + failure recovery -------------------
     cluster = fault.build(kfn, params, S, ds.X, ds.y, runner)

@@ -3,15 +3,20 @@ low-rank covariance approximations) as composable JAX modules.
 
 Layout:
   covariance / linalg        kernel functions + PSD solve helpers
+  api                        fit -> PosteriorState -> predict_batch registry
   gp                         exact FGP (eqs. 1-2)
   pitc / icf                 centralized counterparts (Thm oracles + Table 1 rows)
   ppitc / ppic / picf        the paper's parallel methods (Secs. 3-4)
   support / clustering       support-set selection + (D_m, U_m) co-clustering
   online                     incremental summary assimilation (Sec. 5.2)
   hyper                      marginal-likelihood hyperparameter MLE
+
+Importing this package populates the method registry (``api.REGISTRY``):
+fgp, pitc, pic, ppitc, ppic, picf.
 """
-from repro.core import (covariance, gp, icf, linalg, picf, pitc, ppic,  # noqa
-                        ppitc)
+from repro.core import (api, covariance, gp, icf, linalg, picf, pitc,  # noqa
+                        ppic, ppitc)
+from repro.core.api import FittedGP, fit, get, names  # noqa
 from repro.core.covariance import init_params, make_kernel  # noqa
 from repro.core.gp import GPPosterior  # noqa
 from repro.core.ppitc import ParallelPosterior  # noqa

@@ -1,0 +1,165 @@
+"""Unified GP method API: ``fit -> PosteriorState -> predict_batch``.
+
+The paper's real-time claim rests on amortization: everything that is
+O((|D|/M)^3) or O(|S|^3) happens ONCE at fit time and is cached in a
+per-method ``PosteriorState`` (a pure-array NamedTuple, hence a pytree that
+jits, shards, checkpoints, and hot-swaps); a repeated query then costs only
+the cross-covariances against the cached factors — O(|U||S| + |S|^2) for the
+summary methods instead of re-running the local Cholesky pipeline.
+
+Three layers:
+
+* per-method states   — ``FGPState`` / ``PITCState`` / ``PICState`` /
+  ``PICFState``, defined here so core modules, runners, serving, and
+  checkpointing all agree on the cached representation;
+* ``GPMethod``        — (name, fit, predict, predict_diag) registered by each
+  core module at import; ``get``/``names`` look methods up by string, which
+  is what examples/benchmarks/serving use instead of hand-wired plumbing;
+* ``FittedGP``        — convenience pairing of (method, kfn, params, state)
+  with ``predict``/``predict_diag``/``with_state`` (hot-swap after
+  ``online.assimilate``/``retire``).
+
+Fit is runner-agnostic: the summary/factor construction goes through
+``parallel.runner.Runner.map``, so ``VmapRunner`` and ``ShardMapRunner``
+produce the same state pytree (tested in tests/test_shardmap.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+
+# ---------------------------------------------------------------------------
+# Per-method posterior states (pure-array pytrees).
+# ---------------------------------------------------------------------------
+
+class FGPState(NamedTuple):
+    """Exact GP: cached |D|x|D| Cholesky + weights (eqs. 1-2)."""
+    X: jax.Array        # (n, d) training inputs
+    L: jax.Array        # (n, n) chol(K_DD + noise)
+    alpha: jax.Array    # (n,)   (K_DD + noise)^{-1} y
+
+
+class PITCState(NamedTuple):
+    """PITC/pPITC: everything global lives in S-space (eqs. 5-8)."""
+    S: jax.Array        # (s, d) support set
+    Kss_L: jax.Array    # (s, s) chol K_SS
+    Sdd_L: jax.Array    # (s, s) chol Sigma-dot_DD  (eq. 6)
+    alpha: jax.Array    # (s,)   Sdd^{-1} ydd       (eq. 7 weights)
+
+
+class PICState(NamedTuple):
+    """PIC/pPIC: PITC globals + per-block caches for the local correction
+    (eqs. 12-14). Leading axis of the block fields is the machine axis M."""
+    S: jax.Array        # (s, d)
+    Kss_L: jax.Array    # (s, s)
+    Sdd_L: jax.Array    # (s, s)
+    alpha: jax.Array    # (s,)    Sdd^{-1} ydd
+    Xb: jax.Array       # (M, b, d) data blocks
+    yb: jax.Array       # (M, b)
+    Ksd: jax.Array      # (M, s, b) cached K_S,Dm
+    C_L: jax.Array      # (M, b, b) chol Sigma_{DmDm|S}
+    Wy: jax.Array       # (M, b)    C^{-1} y_m
+    ydot: jax.Array     # (M, s)    local summaries (eq. 3)
+    beta: jax.Array     # (M, s)    Kss^{-1} ydot_m
+    B: jax.Array        # (M, s, s) Kss^{-1} Sdot_m
+    Sdot: jax.Array     # (M, s, s) local summaries (eq. 4)
+
+
+class PICFState(NamedTuple):
+    """pICF-based GP: distributed ICF factor + cached R-space solves
+    (eqs. 19-23)."""
+    Xb: jax.Array       # (M, b, d)
+    yb: jax.Array       # (M, b)
+    F: jax.Array        # (M, R, b) per-machine factor columns
+    Phi_L: jax.Array    # (R, R)   chol(I + sum_m F_m F_m^T / s2)
+    ydd: jax.Array      # (R,)     Phi^{-1} sum_m F_m y_m  (eq. 22)
+
+
+# ---------------------------------------------------------------------------
+# Method registry.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GPMethod:
+    """One GP regression method behind the uniform state API.
+
+    ``fit(kfn, params, X, y, **kw) -> state`` where ``kw`` is the subset of
+    (S=, M=, rank=, runner=) the method needs; ``predict`` returns the
+    method's native posterior (GPPosterior or ParallelPosterior);
+    ``predict_diag`` always returns a (mean, var) pair of (u,) arrays and
+    accepts query batches of any size (block methods pad internally).
+    """
+    name: str
+    fit: Callable[..., Any]
+    predict: Callable[..., Any]        # (kfn, params, state, U) -> posterior
+    predict_diag: Callable[..., Any]   # (kfn, params, state, U) -> (mean, var)
+
+
+REGISTRY: dict[str, GPMethod] = {}
+
+
+def register(method: GPMethod) -> GPMethod:
+    REGISTRY[method.name] = method
+    return method
+
+
+def get(name: str) -> GPMethod:
+    if name not in REGISTRY:
+        # methods self-register at module import; pull the core modules in
+        from repro.core import gp, picf, pitc, ppic, ppitc  # noqa: F401
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown GP method {name!r}; have {names()}")
+
+
+def names() -> list[str]:
+    return sorted(REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# FittedGP — what serving / examples hold on to.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FittedGP:
+    """A fitted model: method + kernel + hyperparameters + cached state.
+
+    ``state`` is the only field that changes across online updates, so
+    serving jits ``predict_diag(params, state, U)`` once and hot-swaps the
+    state pytree without recompiling (launch/gp_serve.py).
+    """
+    method: GPMethod
+    kfn: Callable
+    params: dict
+    state: Any
+
+    def predict(self, U: jax.Array):
+        return self.method.predict(self.kfn, self.params, self.state, U)
+
+    def predict_diag(self, U: jax.Array):
+        return self.method.predict_diag(self.kfn, self.params, self.state, U)
+
+    def with_state(self, state) -> "FittedGP":
+        """Hot-swap the cached posterior (online assimilate/retire)."""
+        return dataclasses.replace(self, state=state)
+
+
+def fit(name: str, kfn, params, X, y, *, S=None, M=None, rank=None,
+        runner=None) -> FittedGP:
+    """Registry front door: fit method ``name`` and return a FittedGP."""
+    method = get(name)
+    kw = {}
+    if S is not None:
+        kw["S"] = S
+    if M is not None:
+        kw["M"] = M
+    if rank is not None:
+        kw["rank"] = rank
+    if runner is not None:
+        kw["runner"] = runner
+    state = method.fit(kfn, params, X, y, **kw)
+    return FittedGP(method, kfn, params, state)

@@ -14,8 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import covariance as cov
 from repro.core import gp, linalg
+from repro.core.ppitc import local_summary
 from repro.optim.adam import Adam
 from repro.parallel.runner import Runner
 
@@ -25,20 +25,16 @@ def pitc_nlml_machine(kfn, params, S, Xm, ym, *, axis_name) -> jax.Array:
 
     Uses the matrix-determinant/inversion lemmas so everything global lives in
     S-space: one psum of [quad-vector | S x S matrix | scalars]. Every machine
-    returns the same (replicated) scalar.
+    returns the same (replicated) scalar. The per-block pieces are the same
+    local summaries prediction caches (ppitc.local_summary) — fit and
+    prediction share one summary producer.
     """
     n_m = Xm.shape[0]
     Kss = kfn(params, S, S)
     Kss_L = linalg.chol(Kss)
-    Ksd = kfn(params, S, Xm)
-    V = linalg.tri_solve(Kss_L, Ksd)
-    Kdd = cov.add_noise(kfn(params, Xm, Xm), params)
-    C_L = linalg.chol(Kdd - V.T @ V)                      # Sigma_{DmDm|S}
-    Wy = linalg.chol_solve(C_L, ym[:, None])              # C^{-1} y_m
-    # local pieces
-    quad_m = (ym[:, None] * Wy).sum()                     # y C^{-1} y
-    ydot_m = Ksd @ Wy[:, 0]                               # (s,)
-    Sdot_m = Ksd @ linalg.chol_solve(C_L, Ksd.T)          # (s, s)
+    local, (Ksd, C_L, Wy) = local_summary(kfn, params, S, Kss_L, Xm, ym)
+    quad_m = ym @ Wy                                      # y C^{-1} y
+    ydot_m, Sdot_m = local.ydot, local.Sdot
     logdet_m = linalg.logdet_from_chol(C_L)
     # one fused all-reduce
     s = S.shape[0]

@@ -11,7 +11,11 @@ local summaries, so:
 * elastic scale-up/down is re-blocking + re-summing cached summaries.
 
 The store keeps the stacked per-machine summaries (cheap: M x (|S| + |S|^2))
-and the running global summary.
+and the running global summary. It is the fit-side *producer* of the cached
+``api.PITCState``: ``to_state`` assembles the S-space factors
+(Kss_L, Sdd_L, alpha) from whatever machines are alive, which is what
+``ppitc.fit`` calls for a cold fit and what serving hot-swaps after
+``assimilate``/``retire`` (launch/gp_serve.py).
 """
 from __future__ import annotations
 
@@ -20,8 +24,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import linalg
-from repro.core.ppitc import GlobalSummary, LocalSummary, local_summary
+from repro.core import api, linalg
+from repro.core.ppitc import (GlobalSummary, LocalSummary, local_summary,
+                              predict_batch)
 from repro.parallel.runner import Runner
 
 
@@ -53,6 +58,18 @@ def global_summary(store: SummaryStore) -> GlobalSummary:
     return GlobalSummary(ydd, Sdd)
 
 
+def to_state(store: SummaryStore, S: jax.Array) -> api.PITCState:
+    """Assemble the cached prediction factors (eqs. 7-8 precomputation).
+
+    This is the O(|S|^3) step — done once per store mutation, after which
+    every ``ppitc.predict_batch`` call is O(|U||S| + |S|^2)."""
+    glob = global_summary(store)
+    Kss_L = linalg.chol(store.Kss)
+    Sdd_L = linalg.chol(glob.Sdd)
+    alpha = linalg.chol_solve(Sdd_L, glob.ydd[:, None])[:, 0]
+    return api.PITCState(S, Kss_L, Sdd_L, alpha)
+
+
 def assimilate(store: SummaryStore, kfn, params, S, X_new, y_new,
                runner: Runner) -> SummaryStore:
     """Fold a new data stream (D', y_D') in — Sec. 5.2.
@@ -77,9 +94,7 @@ def revive(store: SummaryStore, machine: int) -> SummaryStore:
 
 
 def predict_ppitc(store: SummaryStore, kfn, params, S, U) -> tuple:
-    """pPITC prediction (eqs. 7-8) straight from the store (centralized-side
-    convenience; the distributed path uses ppitc.predict_from_summary)."""
-    from repro.core.ppitc import predict_from_summary
-    Kss_L = linalg.chol(store.Kss)
-    return predict_from_summary(kfn, params, S, Kss_L, global_summary(store),
-                                U)
+    """pPITC prediction (eqs. 7-8) straight from the store: thin wrapper
+    over ``to_state`` + ``ppitc.predict_batch``."""
+    post = predict_batch(kfn, params, to_state(store, S), U)
+    return post.mean, post.cov

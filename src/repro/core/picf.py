@@ -8,9 +8,14 @@ collective realization of the MPI pivot broadcast. Communication per step is
 O(d + R); O(R(d+R)) total, matching Table 1's O(R^2 log M) summary term.
 
 Steps 3-6 (eqs. 19-27) then need one psum of (R, R+1+u') quantities and an
-R x R solve. Two prediction layouts:
+R x R solve. The fit/predict split (core/api.py) caches the expensive parts —
+the rank-R factor F and the R-space solves Phi_L / ydd (eqs. 21-22) — in an
+``api.PICFState``; ``predict_batch`` only recomputes the query-dependent
+Sigma-dot (eq. 20) and predictive combine (eqs. 24-27). Prediction layouts:
 
-* ``machine_step``            — U replicated (Defs. 8-9 as written);
+* ``predict_batch``           — centralized combine from the cached state
+  (U replicated; what ``predict`` and the serving path use);
+* ``machine_step``            — fully-collective, U replicated (Defs. 8-9);
 * ``machine_step_sharded_u``  — U sharded over machines (the Remark after
   Def. 7): Sigma-dot chunks are exchanged with ``lax.all_to_all`` and the
   predictive components combined with ``lax.psum_scatter``, cutting the
@@ -25,6 +30,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import api
 from repro.core import covariance as cov
 from repro.core import linalg
 from repro.core.gp import GPPosterior
@@ -172,21 +178,94 @@ def factor(kfn, params, X, R: int, runner: Runner) -> ICFLocal:
     return runner.map(fn, (Xb,), (params,))
 
 
+# ---------------------------------------------------------------------------
+# fit -> PosteriorState -> predict_batch (core/api.py architecture)
+# ---------------------------------------------------------------------------
+
+def fit(kfn, params, X, y, *, rank: int, runner: Runner) -> api.PICFState:
+    """Distributed ICF (the O(R^2 |D|/M) part) + cached R-space solves."""
+    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+    local = factor(kfn, params, X, rank, runner)            # (M, R, b)
+    s2 = cov.noise_var(params)
+    R = local.F.shape[1]
+    Phi = jnp.eye(R, dtype=local.F.dtype) \
+        + jnp.sum(jnp.einsum("mrb,msb->mrs", local.F, local.F), 0) / s2
+    Phi_L = linalg.chol(Phi, jitter=0.0)                    # eq. 21
+    yF = jnp.sum(jnp.einsum("mrb,mb->mr", local.F, yb), 0)  # eq. 19
+    ydd = linalg.chol_solve(Phi_L, yF[:, None])[:, 0]       # eq. 22
+    return api.PICFState(Xb, yb, local.F, Phi_L, ydd)
+
+
+def predict_batch(kfn, params, state: api.PICFState, U, *,
+                  diag_only: bool = False) -> GPPosterior:
+    """Eqs. (20), (23)-(27) from the cached factor — no rank loop per query."""
+    s2 = cov.noise_var(params)
+
+    def per_m(Xm, ym, Fm):
+        Kud = kfn(params, U, Xm)                            # (u, b)
+        return Kud @ ym, Fm @ Kud.T, Kud
+
+    Ky, Sdot_m, Kud_m = jax.vmap(per_m)(state.Xb, state.yb, state.F)
+    Sdot = jnp.sum(Sdot_m, 0)                               # (R, u) eq. 20
+    mean = jnp.sum(Ky, 0) / s2 - Sdot.T @ state.ydd / s2**2  # eqs. 24/26
+    Sdd = linalg.chol_solve(state.Phi_L, Sdot)              # eq. 23
+    if diag_only:
+        var = (cov.kdiag(kfn, params, U)
+               - jnp.sum(jnp.einsum("mub,mub->mu", Kud_m, Kud_m), 0) / s2
+               + jnp.sum(Sdot * Sdd, 0) / s2**2)
+        return GPPosterior(mean, jnp.diag(var))
+    Kuu = kfn(params, U, U)
+    Sig = jnp.sum(jnp.einsum("mub,mvb->muv", Kud_m, Kud_m), 0) / s2 \
+        - Sdot.T @ Sdd / s2**2                              # eqs. 25/27
+    return GPPosterior(mean, Kuu - Sig)
+
+
+def predict_batch_diag(kfn, params, state: api.PICFState, U):
+    """(mean, var) vectors — no |U|x|U| intermediates (serving hot path)."""
+    s2 = cov.noise_var(params)
+
+    def per_m(Xm, ym, Fm):
+        Kud = kfn(params, U, Xm)                            # (u, b)
+        return Kud @ ym, Fm @ Kud.T, jnp.sum(Kud * Kud, axis=1)
+
+    Ky, Sdot_m, K2 = jax.vmap(per_m)(state.Xb, state.yb, state.F)
+    Sdot = jnp.sum(Sdot_m, 0)                               # (R, u) eq. 20
+    mean = jnp.sum(Ky, 0) / s2 - Sdot.T @ state.ydd / s2**2
+    Sdd = linalg.chol_solve(state.Phi_L, Sdot)              # eq. 23
+    var = (cov.kdiag(kfn, params, U) - jnp.sum(K2, 0) / s2
+           + jnp.sum(Sdot * Sdd, 0) / s2**2)
+    return mean, var
+
+
 def predict(kfn, params, X, y, U, R: int, runner: Runner, *,
             shard_u: bool = False):
-    """End-to-end pICF-based GP regression over a Runner."""
-    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
-    local = factor(kfn, params, X, R, runner)
+    """End-to-end pICF-based GP regression over a Runner.
 
+    The replicated-U layout is a thin wrapper over fit + predict_batch; the
+    sharded-U layout stays fully collective (its point is the comm pattern).
+    """
     if shard_u:
+        Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+        local = factor(kfn, params, X, R, runner)
         Ub = runner.shard_blocks(U)
         fn = lambda Xm, ym, Fm, params, Ub_all: machine_step_sharded_u(
             kfn, params, Xm, ym, Ub_all, Fm, axis_name=runner.axis_name)
         means, covs = runner.map(fn, (Xb, yb, local.F), (params, Ub))
         return ParallelPosterior(runner.unshard(means), covs)
 
+    state = fit(kfn, params, X, y, rank=R, runner=runner)
+    return predict_batch(kfn, params, state, U)
+
+
+def predict_distributed(kfn, params, X, y, U, R: int, runner: Runner):
+    """Fully-collective replicated-U pICF (Defs. 8-9 as written)."""
+    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+    local = factor(kfn, params, X, R, runner)
     fn = lambda Xm, ym, Fm, params, U: machine_step(
         kfn, params, Xm, ym, U, Fm, axis_name=runner.axis_name)
     means, covs = runner.map(fn, (Xb, yb, local.F), (params, U))
     # replicated outputs: every machine holds the same full posterior
     return GPPosterior(means[0], covs[0])
+
+
+api.register(api.GPMethod("picf", fit, predict_batch, predict_batch_diag))

@@ -11,17 +11,20 @@ Two implementations each:
     as written in the theorem statements. O(|D|^2) memory; this is the oracle
     the equivalence tests compare the parallel methods against.
   * ``*_blockwise`` — the efficient centralized algorithm (block loop on one
-    machine, Table 1 complexity row "PITC"/"PIC") used by the benchmark
-    harness for the speedup curves.
+    machine, Table 1 complexity row "PITC"/"PIC"): since the math is identical
+    to the parallel methods', these are thin wrappers over the shared
+    ``fit -> PosteriorState -> predict_batch`` path (core/api.py) with a
+    single-process VmapRunner standing in for the M machines.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.core import api
 from repro.core import covariance as cov
 from repro.core import linalg
 from repro.core.gp import GPPosterior
+from repro.parallel.runner import VmapRunner
 
 
 # ---------------------------------------------------------------------------
@@ -36,7 +39,11 @@ def _gamma(kfn, params, S, A, B, Kss_L):
 
 
 def _blocks(n: int, M: int) -> list[slice]:
-    assert n % M == 0, f"|D|={n} must divide among M={M} machines (Def. 1)"
+    if n % M != 0:
+        raise ValueError(
+            f"|D|={n} must divide among M={M} machines (Def. 1); pad the "
+            f"data or pick M dividing n — query batches go through "
+            f"parallel.runner.pad_blocks instead")
     b = n // M
     return [slice(m * b, (m + 1) * b) for m in range(M)]
 
@@ -100,99 +107,62 @@ def pic_predict_literal(kfn, params, S, X_train, y_train, X_test,
 
 
 # ---------------------------------------------------------------------------
-# Efficient centralized PITC/PIC — block loop on one machine.
-# Same math as the parallel methods but sequential: this is what the paper
-# times as "PITC"/"PIC" when reporting speedups of pPITC/pPIC.
+# Efficient centralized PITC/PIC — thin wrappers over the shared state path.
+# Same math as the parallel methods but on one process: this is what the
+# paper times as "PITC"/"PIC" when reporting speedups of pPITC/pPIC.
 # ---------------------------------------------------------------------------
 
-def _local_summaries(kfn, params, S, Xb, yb):
-    """Per-block (3)-(4) restricted to B=B'=S, plus pieces reused by PIC.
-
-    Xb: (M, b, d) stacked blocks; returns stacked summaries.
-    """
-    Kss = kfn(params, S, S)
-    Kss_L = linalg.chol(Kss)
-
-    def one(Xm, ym):
-        Ksd = kfn(params, S, Xm)                       # (s, b)
-        V = linalg.tri_solve(Kss_L, Ksd)               # Kss^{-1/2} K_SD_m
-        Kdd = cov.add_noise(kfn(params, Xm, Xm), params)
-        C = Kdd - V.T @ V                              # Sigma_DmDm|S
-        C_L = linalg.chol(C)
-        W = linalg.chol_solve(C_L, Ksd.T)              # C^{-1} K_DmS  (b, s)
-        ydot = Ksd @ linalg.chol_solve(C_L, ym[:, None])[:, 0]   # (s,)
-        Sdot = Ksd @ W                                 # (s, s)
-        return ydot, Sdot
-
-    return Kss, Kss_L, jax.vmap(one)(Xb, yb)
+def fit(kfn, params, X, y, *, S, M: int) -> api.PITCState:
+    """Centralized PITC fit: identical state to ``ppitc.fit`` by
+    construction (the block loop is the vmap simulation of M machines)."""
+    from repro.core import ppitc
+    return ppitc.fit(kfn, params, X, y, S=S, runner=VmapRunner(M=M))
 
 
-def _stack_blocks(X, y, M):
-    n, d = X.shape
-    b = n // M
-    return X.reshape(M, b, d), y.reshape(M, b)
+def fit_pic(kfn, params, X, y, *, S, M: int) -> api.PICState:
+    """Centralized PIC fit over the shared pPIC state path."""
+    from repro.core import ppic
+    return ppic.fit(kfn, params, X, y, S=S, runner=VmapRunner(M=M))
 
 
 def pitc_predict_blockwise(kfn, params, S, X_train, y_train, X_test,
                            M: int) -> GPPosterior:
-    Xb, yb = _stack_blocks(X_train, y_train, M)
-    Kss, Kss_L, (ydots, Sdots) = _local_summaries(kfn, params, S, Xb, yb)
-    ydd = jnp.sum(ydots, axis=0)                       # eq. (5)
-    Sdd = Kss + jnp.sum(Sdots, axis=0)                 # eq. (6)
-    Sdd_L = linalg.chol(Sdd)
-
-    Kus = kfn(params, X_test, S)
-    mean = Kus @ linalg.chol_solve(Sdd_L, ydd[:, None])[:, 0]      # eq. (7)
-    K_uu = kfn(params, X_test, X_test)
-    covm = K_uu - Kus @ (linalg.chol_solve(Kss_L, Kus.T)
-                         - linalg.chol_solve(Sdd_L, Kus.T))        # eq. (8)
-    return GPPosterior(mean, covm)
+    from repro.core import ppitc
+    state = fit(kfn, params, X_train, y_train, S=S, M=M)
+    return ppitc.predict_batch(kfn, params, state, X_test)
 
 
 def pic_predict_blockwise(kfn, params, S, X_train, y_train, X_test,
                           M: int) -> GPPosterior:
     """Efficient centralized PIC: summary term + per-block local correction.
 
-    Matches eqs. (12)-(14) computed sequentially over blocks; the equivalence
-    test checks it against pic_predict_literal.
+    Matches eqs. (12)-(14) computed blockwise; the equivalence test checks it
+    against pic_predict_literal. Returns the dense block-diagonal cov view.
     """
-    n, u = X_train.shape[0], X_test.shape[0]
-    Xb, yb = _stack_blocks(X_train, y_train, M)
-    Ub = X_test.reshape(M, u // M, -1)
-    Kss, Kss_L, (ydots, Sdots) = _local_summaries(kfn, params, S, Xb, yb)
-    ydd = jnp.sum(ydots, axis=0)
-    Sdd = Kss + jnp.sum(Sdots, axis=0)
-    Sdd_L = linalg.chol(Sdd)
+    from repro.core import ppic
+    state = fit_pic(kfn, params, X_train, y_train, S=S, M=M)
+    return ppic.predict_batch(kfn, params, state, X_test)
 
-    def one(Xm, ym, Um, ydot_m):
-        Ksd = kfn(params, S, Xm)
-        V = linalg.tri_solve(Kss_L, Ksd)
-        Kdd = cov.add_noise(kfn(params, Xm, Xm), params)
-        C_L = linalg.chol(Kdd - V.T @ V)               # Sigma_DmDm|S
-        Kud = kfn(params, Um, Xm)                      # Sigma_UmDm
-        Kus = kfn(params, Um, S)
-        W = linalg.chol_solve(C_L, Kud.T)              # C^{-1} K_DmUm
-        ydot_u = Kud @ linalg.chol_solve(C_L, ym[:, None])[:, 0]   # ydot_{U_m}
-        Sdot_su = Ksd @ W                              # Sigma-dot_{S U_m}
-        Sdot_uu = Kud @ W                              # Sigma-dot_{U_m U_m}
-        # eq. (14): Phi_{U_m S}
-        Sdot_ss = Ksd @ linalg.chol_solve(C_L, Ksd.T)
-        Phi = Kus + Kus @ linalg.chol_solve(Kss_L, Sdot_ss) - Sdot_su.T
-        # eq. (12)
-        mean = (Phi @ linalg.chol_solve(Sdd_L, ydd[:, None])[:, 0]
-                - Kus @ linalg.chol_solve(Kss_L, ydot_m[:, None])[:, 0]
-                + ydot_u)
-        # eq. (13). NB the published rendering drops the Phi Sdd^{-1} Phi^T
-        # term; re-derived from Thm 2 (Woodbury on Gamma_DD + Lambda):
-        #   Sigma+_mm = K_uu - Phi Kss^{-1} K_su + Phi Sdd^{-1} Phi^T
-        #               + K_us Kss^{-1} Sdot_su - Sdot_uu
-        Kuu = kfn(params, Um, Um)
-        covm = Kuu - (Phi @ linalg.chol_solve(Kss_L, Kus.T)
-                      - Phi @ linalg.chol_solve(Sdd_L, Phi.T)
-                      - Kus @ linalg.chol_solve(Kss_L, Sdot_su)) - Sdot_uu
-        return mean, covm
 
-    means, covs = jax.vmap(one)(Xb, yb, Ub, ydots)
-    mean = means.reshape(u)
-    covm = jax.scipy.linalg.block_diag(*[covs[m] for m in range(M)])
-    return GPPosterior(mean, covm)
+def _pitc_predict(kfn, params, state, U):
+    from repro.core import ppitc
+    return ppitc.predict_batch(kfn, params, state, U)
+
+
+def _pitc_predict_diag(kfn, params, state, U):
+    from repro.core import ppitc
+    return ppitc.predict_batch_diag(kfn, params, state, U)
+
+
+def _pic_predict(kfn, params, state, U):
+    from repro.core import ppic
+    return ppic.predict_batch(kfn, params, state, U)
+
+
+def _pic_predict_diag(kfn, params, state, U):
+    from repro.core import ppic
+    return ppic.predict_batch_diag(kfn, params, state, U)
+
+
+api.register(api.GPMethod("pitc", fit, _pitc_predict, _pitc_predict_diag))
+api.register(api.GPMethod("pic", fit_pic, _pic_predict, _pic_predict_diag))

@@ -4,6 +4,15 @@ Extends pPITC with the worker-local correction: machine m blends the global
 summary with exact covariance against its own block (eqs. 12-14), recovering
 centralized PIC (Snelson 2007) exactly.
 
+Fit/predict split (core/api.py): ``fit`` caches, per block, the factors the
+local correction needs (Ksd, chol Sigma_{DmDm|S}, C^{-1}y, Kss^{-1}-projected
+summaries) plus the global S-space factors, in an ``api.PICState``. A
+repeated query batch then skips every O(b^3) local Cholesky — only
+cross-covariances and cached triangular solves remain. Query batches are
+assigned to blocks in order and zero-padded when |U| doesn't divide M
+(serving path); co-cluster queries first (core/clustering.py, Remark 2) when
+accuracy matters.
+
 NB eq. (13) as printed drops a `Phi Sdd^{-1} Phi^T` term; the form implemented
 here is re-derived from Theorem 2 (see core/pitc.py) and verified against the
 literal PIC oracle in tests/test_equivalence.py.
@@ -13,17 +22,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import api
 from repro.core import covariance as cov
 from repro.core import linalg
+from repro.core.gp import GPPosterior
 from repro.core.ppitc import (GlobalSummary, LocalSummary, ParallelPosterior,
                               global_summary, local_summary)
-from repro.parallel.runner import Runner
+from repro.parallel.runner import Runner, pad_blocks
 
 
 def machine_step(kfn, params, S, Xm, ym, Um, *, axis_name):
     """Full pPIC per-machine program: steps 2-4 with local correction."""
     Kss_L = linalg.chol(kfn(params, S, S))
-    local, (Ksd, C_L) = local_summary(kfn, params, S, Kss_L, Xm, ym)
+    local, (Ksd, C_L, _) = local_summary(kfn, params, S, Kss_L, Xm, ym)
     glob = global_summary(kfn, params, S, local, axis_name)
     return predict_from_summary(kfn, params, S, Kss_L, local, glob,
                                 Xm, ym, Um, Ksd=Ksd, C_L=C_L)
@@ -65,14 +76,130 @@ def predict_from_summary(kfn, params, S, Kss_L, local: LocalSummary,
     return mean, covm
 
 
+# ---------------------------------------------------------------------------
+# fit -> PosteriorState -> predict_batch (core/api.py architecture)
+# ---------------------------------------------------------------------------
+
+def fit(kfn, params, X, y, *, S, runner: Runner) -> api.PICState:
+    """Steps 1-3 over a Runner + per-block caches for eqs. (12)-(14)."""
+    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+
+    def fn(Xm, ym, params, S):
+        Kss_L = linalg.chol(kfn(params, S, S))
+        loc, (Ksd, C_L, Wy) = local_summary(kfn, params, S, Kss_L, Xm, ym)
+        beta = linalg.chol_solve(Kss_L, loc.ydot[:, None])[:, 0]
+        B = linalg.chol_solve(Kss_L, loc.Sdot)
+        return loc, Ksd, C_L, Wy, beta, B
+
+    loc, Ksd, C_L, Wy, beta, B = runner.map(fn, (Xb, yb), (params, S))
+    Kss = kfn(params, S, S)
+    Kss_L = linalg.chol(Kss)
+    Sdd = Kss + jnp.sum(loc.Sdot, axis=0)              # eq. (6)
+    Sdd_L = linalg.chol(Sdd)
+    ydd = jnp.sum(loc.ydot, axis=0)                    # eq. (5)
+    alpha = linalg.chol_solve(Sdd_L, ydd[:, None])[:, 0]
+    return api.PICState(S, Kss_L, Sdd_L, alpha, Xb, yb, Ksd, C_L, Wy,
+                        loc.ydot, beta, B, loc.Sdot)
+
+
+def _block_posterior(kfn, params, state: api.PICState, Um, m_fields):
+    """Eqs. (12)-(14) for one query block from cached factors."""
+    Xm, ym, Ksd, C_L, Wy, ydot, beta, B = m_fields
+    Kus = kfn(params, Um, state.S)
+    Kud = kfn(params, Um, Xm)
+    ydot_u = Kud @ Wy
+    Wd = linalg.chol_solve(C_L, Kud.T)                 # C^{-1} K_{D_m U_m}
+    Sdot_su = Ksd @ Wd
+    Sdot_uu = Kud @ Wd
+    Phi = Kus + Kus @ B - Sdot_su.T                    # eq. (14)
+    mean = Phi @ state.alpha - Kus @ beta + ydot_u     # eq. (12)
+    Kuu = kfn(params, Um, Um)
+    covm = Kuu - (Phi @ linalg.chol_solve(state.Kss_L, Kus.T)
+                  - Phi @ linalg.chol_solve(state.Sdd_L, Phi.T)
+                  - Kus @ linalg.chol_solve(state.Kss_L, Sdot_su)) - Sdot_uu
+    return mean, covm
+
+
+def _block_fields(state: api.PICState):
+    return (state.Xb, state.yb, state.Ksd, state.C_L, state.Wy, state.ydot,
+            state.beta, state.B)
+
+
+def predict_blocks(kfn, params, state: api.PICState,
+                   U) -> ParallelPosterior:
+    """Block-layout posterior from cached state (|U| must divide M;
+    queries are assigned to blocks in order)."""
+    M = state.Xb.shape[0]
+    u = U.shape[0]
+    if u % M != 0:
+        raise ValueError(
+            f"|U|={u} must divide M={M} for the block layout; use "
+            f"predict_batch/predict_batch_diag for arbitrary batch sizes")
+    one = lambda Um, *mf: _block_posterior(kfn, params, state, Um, mf)
+    means, covs = jax.vmap(one)(U.reshape((M, u // M) + U.shape[1:]),
+                                *_block_fields(state))
+    return ParallelPosterior(means.reshape(-1), covs)
+
+
+def predict_batch(kfn, params, state: api.PICState, U) -> GPPosterior:
+    """Blockwise posterior from cached state for any |U|: pads the query
+    batch to the block layout, assembles the dense block-diagonal
+    covariance, and trims. (Type-stable; use ``predict_blocks`` when the
+    per-machine block layout itself is wanted.)"""
+    M = state.Xb.shape[0]
+    u = U.shape[0]
+    Ub, _ = pad_blocks(U, M)
+    one = lambda Um, *mf: _block_posterior(kfn, params, state, Um, mf)
+    means, covs = jax.vmap(one)(Ub, *_block_fields(state))
+    post = ParallelPosterior(means.reshape(-1), covs)
+    return GPPosterior(post.mean[:u], post.cov[:u, :u])
+
+
+def predict_batch_diag(kfn, params, state: api.PICState, U):
+    """(mean, var) for any |U|: pads to the block layout, trims after."""
+    M = state.Xb.shape[0]
+    u = U.shape[0]
+    Ub, _ = pad_blocks(U, M)
+
+    def one(Um, *mf):
+        Xm, ym, Ksd, C_L, Wy, ydot, beta, B = mf
+        Kus = kfn(params, Um, state.S)
+        Kud = kfn(params, Um, Xm)
+        ydot_u = Kud @ Wy
+        Wd = linalg.chol_solve(C_L, Kud.T)
+        Sdot_su = Ksd @ Wd
+        Phi = Kus + Kus @ B - Sdot_su.T
+        mean = Phi @ state.alpha - Kus @ beta + ydot_u
+        # diag of eq. (13) without the |U_m|^2 intermediates
+        var = (cov.kdiag(kfn, params, Um)
+               - jnp.sum(Phi.T * linalg.chol_solve(state.Kss_L, Kus.T), 0)
+               + jnp.sum(Phi.T * linalg.chol_solve(state.Sdd_L, Phi.T), 0)
+               + jnp.sum(Kus.T * linalg.chol_solve(state.Kss_L, Sdot_su), 0)
+               - jnp.einsum("ub,bu->u", Kud, Wd))
+        return mean, var
+
+    means, vars_ = jax.vmap(one)(Ub, *_block_fields(state))
+    return means.reshape(-1)[:u], vars_.reshape(-1)[:u]
+
+
 def predict(kfn, params, S, X, y, U, runner: Runner) -> ParallelPosterior:
-    """End-to-end pPIC over a Runner.
+    """End-to-end pPIC: thin wrapper over fit + predict_blocks.
 
     For best accuracy X/U should be co-clustered first
     (core/clustering.py — Remark 2 after Def. 5).
     """
+    state = fit(kfn, params, X, y, S=S, runner=runner)
+    return predict_blocks(kfn, params, state, U)
+
+
+def predict_distributed(kfn, params, S, X, y, U,
+                        runner: Runner) -> ParallelPosterior:
+    """Fully-collective pPIC (psum inside the per-machine program)."""
     Xb, yb, Ub = (runner.shard_blocks(a) for a in (X, y, U))
     fn = lambda Xm, ym, Um, params, S: machine_step(
         kfn, params, S, Xm, ym, Um, axis_name=runner.axis_name)
     means, covs = runner.map(fn, (Xb, yb, Ub), (params, S))
     return ParallelPosterior(runner.unshard(means), covs)
+
+
+api.register(api.GPMethod("ppic", fit, predict_batch, predict_batch_diag))

@@ -9,6 +9,13 @@ Per-machine program (runs under VmapRunner or ShardMapRunner):
           O(|S|^2 log M) as in Table 1);
   Step 4  each machine predicts its U_m slice (eqs. 7-8) locally.
 
+Fit/predict split (core/api.py): ``fit`` runs steps 1-3 through a Runner and
+caches the S-space factors in an ``api.PITCState`` (Kss_L, Sdd_L,
+alpha = Sdd^{-1} ydd); ``predict_batch`` is then O(|U||S| + |S|^2) per query
+batch — the real-time path. ``predict`` (legacy one-shot) is a thin wrapper
+over the two; ``predict_distributed`` keeps the fully-collective execution
+where prediction itself must stay on-device.
+
 Zero prior mean assumed (data pipeline centers y).
 """
 from __future__ import annotations
@@ -18,8 +25,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import api
 from repro.core import covariance as cov
 from repro.core import linalg
+from repro.core.gp import GPPosterior
 from repro.parallel.runner import Runner
 
 
@@ -52,15 +61,16 @@ class ParallelPosterior(NamedTuple):
 
 
 def local_summary(kfn, params, S, Kss_L, Xm, ym):
-    """Eqs. (3)-(4) with B=B'=S. Also returns the pieces pPIC reuses."""
+    """Eqs. (3)-(4) with B=B'=S. Also returns the pieces pPIC/hyper reuse:
+    (Ksd, C_L = chol Sigma_{DmDm|S}, Wy = C^{-1} y_m)."""
     Ksd = kfn(params, S, Xm)                          # (s, b)
     V = linalg.tri_solve(Kss_L, Ksd)                  # Kss^{-1/2} K_SD_m
     Kdd = cov.add_noise(kfn(params, Xm, Xm), params)
     C_L = linalg.chol(Kdd - V.T @ V)                  # chol Sigma_{DmDm|S}
-    W = linalg.chol_solve(C_L, ym[:, None])[:, 0]     # C^{-1}(y - mu)
-    ydot = Ksd @ W
+    Wy = linalg.chol_solve(C_L, ym[:, None])[:, 0]    # C^{-1}(y - mu)
+    ydot = Ksd @ Wy
     Sdot = Ksd @ linalg.chol_solve(C_L, Ksd.T)
-    return LocalSummary(ydot, Sdot), (Ksd, C_L)
+    return LocalSummary(ydot, Sdot), (Ksd, C_L, Wy)
 
 
 def global_summary(kfn, params, S, local: LocalSummary,
@@ -91,8 +101,71 @@ def predict_from_summary(kfn, params, S, Kss_L, glob: GlobalSummary, Um):
     return mean, covm
 
 
+# ---------------------------------------------------------------------------
+# fit -> PosteriorState -> predict_batch (core/api.py architecture)
+# ---------------------------------------------------------------------------
+
+def fit(kfn, params, X, y, *, S, runner: Runner) -> api.PITCState:
+    """Steps 1-3 over a Runner, cached as an ``api.PITCState``.
+
+    ``online.SummaryStore`` is the fit-side producer: the same per-machine
+    summaries that support streaming assimilation (Sec. 5.2) are assembled
+    into the cached S-space factors here, so online updates and cold fits
+    share one code path.
+    """
+    from repro.core import online
+    return online.to_state(online.build(kfn, params, S, X, y, runner), S)
+
+
+def predict_batch(kfn, params, state: api.PITCState, U) -> GPPosterior:
+    """Eqs. (7)-(8) from cached factors: O(|U||S| + |S|^2) per call."""
+    Kus = kfn(params, U, state.S)
+    mean = Kus @ state.alpha
+    Kuu = kfn(params, U, U)
+    covm = Kuu - Kus @ (linalg.chol_solve(state.Kss_L, Kus.T)
+                        - linalg.chol_solve(state.Sdd_L, Kus.T))
+    return GPPosterior(mean, covm)
+
+
+def predict_batch_diag(kfn, params, state: api.PITCState, U):
+    """(mean, var) without forming the |U|x|U| posterior covariance."""
+    Kus = kfn(params, U, state.S)
+    mean = Kus @ state.alpha
+    A = linalg.chol_solve(state.Kss_L, Kus.T)         # Kss^{-1} K_SU
+    B = linalg.chol_solve(state.Sdd_L, Kus.T)         # Sdd^{-1} K_SU
+    var = (cov.kdiag(kfn, params, U)
+           - jnp.sum(Kus.T * A, axis=0) + jnp.sum(Kus.T * B, axis=0))
+    return mean, var
+
+
+def predict_blocks(kfn, params, state: api.PITCState, U,
+                   M: int) -> ParallelPosterior:
+    """Per-machine prediction layout (step 4) from the cached state."""
+    u = U.shape[0]
+    Ub = U.reshape(M, u // M, -1)
+
+    def one(Um):
+        Kus = kfn(params, Um, state.S)
+        mean = Kus @ state.alpha
+        Kuu = kfn(params, Um, Um)
+        covm = Kuu - Kus @ (linalg.chol_solve(state.Kss_L, Kus.T)
+                            - linalg.chol_solve(state.Sdd_L, Kus.T))
+        return mean, covm
+
+    means, covs = jax.vmap(one)(Ub)
+    return ParallelPosterior(means.reshape(u), covs)
+
+
 def predict(kfn, params, S, X, y, U, runner: Runner) -> ParallelPosterior:
-    """End-to-end pPITC over a Runner (vmap simulation or shard_map)."""
+    """End-to-end pPITC: thin wrapper over fit + predict_blocks."""
+    state = fit(kfn, params, X, y, S=S, runner=runner)
+    return predict_blocks(kfn, params, state, U, runner.num_machines)
+
+
+def predict_distributed(kfn, params, S, X, y, U,
+                        runner: Runner) -> ParallelPosterior:
+    """Fully-collective pPITC (psum inside the per-machine program) — the
+    execution the paper describes; kept for on-device end-to-end runs."""
     Xb, yb, Ub = runner.shard_blocks(X), runner.shard_blocks(y), \
         runner.shard_blocks(U)
     fn = lambda Xm, ym, Um, params, S: machine_step(
@@ -120,3 +193,6 @@ def summaries(kfn, params, S, X, y, runner: Runner):
     glob = GlobalSummary(jnp.sum(locals_.ydot, 0),
                          Kss + jnp.sum(locals_.Sdot, 0))
     return locals_, glob
+
+
+api.register(api.GPMethod("ppitc", fit, predict_batch, predict_batch_diag))

@@ -1,0 +1,161 @@
+"""Real-time microbatched GP prediction serving.
+
+The paper's headline claim is that low-rank parallel GPs make *real-time*
+prediction possible. The serving-side realization (core/api.py architecture):
+
+* the expensive factors live in a cached ``PosteriorState`` (fit once, or
+  streamed via ``online.assimilate``);
+* incoming query points are queued and padded to a small set of bucket
+  sizes, so ONE jitted ``predict_diag(params, state, U)`` call serves the
+  whole microbatch with at most ``len(buckets)`` compilations ever;
+* the state is hot-swappable: after ``online.assimilate``/``retire`` the
+  new state pytree has the same treedef/shapes (pPITC: |S|-space only), so
+  ``swap_state`` changes the posterior under live traffic with zero
+  recompilation.
+
+Single-process and synchronous by design — the concurrency story is the
+mesh underneath (ShardMapRunner fit) plus XLA async dispatch; what this
+layer owns is amortization (never redo O(b^3) work per query) and batching
+(never launch per-point kernels). benchmarks/bench_serve_latency.py
+quantifies both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+
+
+def default_buckets(max_batch: int, *, min_bucket: int = 8) -> tuple[int, ...]:
+    """Powers of two from min_bucket to max_batch (inclusive)."""
+    sizes = []
+    b = min_bucket
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return tuple(sizes)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int = 0
+    n_batches: int = 0
+    n_padded_rows: int = 0
+    n_state_swaps: int = 0
+    n_evicted: int = 0
+
+
+class GPServer:
+    """Microbatching front-end over a ``FittedGP``.
+
+    ``submit`` enqueues query points and returns a ticket; ``flush`` runs one
+    jitted predict over the padded queue and resolves every ticket to a
+    (mean, var) pair. ``submit`` auto-flushes when the queue reaches
+    ``max_batch``. ``predict`` is the synchronous path for a caller-held
+    batch (still bucket-padded, still amortized).
+    """
+
+    def __init__(self, model: api.FittedGP, *, max_batch: int = 64,
+                 buckets: tuple[int, ...] | None = None,
+                 max_ready: int = 65536):
+        self.model = model
+        self.max_batch = max_batch
+        self.buckets = tuple(sorted(buckets or default_buckets(max_batch)))
+        if self.buckets[-1] < max_batch:
+            raise ValueError(f"largest bucket {self.buckets[-1]} < "
+                             f"max_batch {max_batch}")
+        self.max_ready = max_ready
+        self.stats = ServeStats()
+        self._queue: list[tuple[int, jax.Array]] = []
+        self._ready: dict[int, tuple[jax.Array, jax.Array]] = {}
+        self._next_ticket = 0
+        method, kfn = model.method, model.kfn
+        # params/state are traced arguments: hot-swapping either re-runs the
+        # same compiled executable as long as shapes/dtypes are unchanged.
+        self._predict_fn: Callable = jax.jit(
+            lambda params, state, U: method.predict_diag(kfn, params,
+                                                         state, U))
+
+    # -- request path -------------------------------------------------------
+
+    def submit(self, x: jax.Array) -> int:
+        """Enqueue one query point (d,); returns a ticket for ``result``."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, jnp.asarray(x)))
+        self.stats.n_requests += 1
+        if len(self._queue) >= self.max_batch:
+            self.flush()
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> None:
+        """Serve the queue with one padded, jitted predict call."""
+        if not self._queue:
+            return
+        tickets = [t for t, _ in self._queue]
+        U = jnp.stack([x for _, x in self._queue])
+        # predict before clearing: a failing batch (e.g. one malformed
+        # point) must not destroy the other pending tickets
+        mean, var = self.predict(U)
+        self._queue.clear()
+        for i, t in enumerate(tickets):
+            self._ready[t] = (mean[i], var[i])
+        # bound memory against abandoned tickets: evict oldest results
+        # (dicts preserve insertion order) beyond max_ready
+        while len(self._ready) > self.max_ready:
+            dropped = next(iter(self._ready))
+            del self._ready[dropped]
+            self.stats.n_evicted += 1
+
+    def result(self, ticket: int) -> tuple[jax.Array, jax.Array]:
+        """(mean, var) for a ticket; flushes if it is still queued."""
+        if ticket not in self._ready:
+            self.flush()
+        try:
+            return self._ready.pop(ticket)
+        except KeyError:
+            raise KeyError(f"ticket {ticket}: unknown, already collected, "
+                           f"or evicted (max_ready={self.max_ready})") \
+                from None
+
+    # -- batch path ---------------------------------------------------------
+
+    def predict(self, U: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Bucket-padded (mean, var) over a (u, d) batch of queries."""
+        u = U.shape[0]
+        bucket = self._bucket_for(u)
+        if bucket > u:
+            U = jnp.pad(U, [(0, bucket - u)] + [(0, 0)] * (U.ndim - 1))
+            self.stats.n_padded_rows += bucket - u
+        mean, var = self._predict_fn(self.model.params, self.model.state, U)
+        self.stats.n_batches += 1
+        return mean[:u], var[:u]
+
+    def _bucket_for(self, u: int) -> int:
+        for b in self.buckets:
+            if b >= u:
+                return b
+        # oversized batches round up to a multiple of the largest bucket
+        big = self.buckets[-1]
+        return -(-u // big) * big
+
+    # -- state hot-swap -----------------------------------------------------
+
+    def swap_state(self, state: Any) -> None:
+        """Install a new PosteriorState (after online assimilate/retire).
+
+        Same treedef + leaf shapes -> the jitted executable is reused; a
+        changed structure (e.g. pPIC after assimilate grew the block axis)
+        triggers exactly one recompile on the next call.
+        """
+        self.model = self.model.with_state(state)
+        self.stats.n_state_swaps += 1

@@ -16,12 +16,16 @@ stacked outputs (M, ...), so callers are backend-agnostic.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+
+# jax.shard_map graduated from jax.experimental in 0.4.x; support both
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,11 +46,26 @@ class Runner:
         raise NotImplementedError
 
     def shard_blocks(self, X: jax.Array) -> jax.Array:
-        """(n, ...) -> (M, n/M, ...) block layout (paper Def. 1)."""
+        """(n, ...) -> (M, n/M, ...) block layout (paper Def. 1).
+
+        Training data must divide exactly — zero-padding data rows would
+        corrupt the local summaries (a padded row adds a spurious noise-only
+        observation to Sigma_{DmDm|S}). Query batches are row-independent and
+        go through ``pad_blocks`` instead (the serving path).
+        """
         M = self.num_machines
         n = X.shape[0]
-        assert n % M == 0, f"n={n} must divide M={M} (Def. 1)"
+        if n % M != 0:
+            raise ValueError(
+                f"n={n} does not divide among M={M} machines (Def. 1). "
+                f"Either trim/re-block the data so M | n, or — for query "
+                f"batches — use parallel.runner.pad_blocks(X, M), which "
+                f"zero-pads and returns the valid count for trimming.")
         return X.reshape((M, n // M) + X.shape[1:])
+
+    def pad_blocks(self, X: jax.Array) -> tuple[jax.Array, int]:
+        """Zero-padded (M, ceil(n/M), ...) block layout; see ``pad_blocks``."""
+        return pad_blocks(X, self.num_machines)
 
     def unshard(self, Xb: jax.Array) -> jax.Array:
         return Xb.reshape((-1,) + Xb.shape[2:])
@@ -102,8 +121,25 @@ class ShardMapRunner(Runner):
             return jax.tree.map(lambda a: a[None], out)
 
         in_specs = tuple(spec for _ in sharded) + tuple(P() for _ in replicated)
-        return jax.shard_map(inner, mesh=self.mesh, in_specs=in_specs,
-                             out_specs=spec)(*sharded, *replicated)
+        return _shard_map(inner, mesh=self.mesh, in_specs=in_specs,
+                          out_specs=spec)(*sharded, *replicated)
+
+
+def pad_blocks(X: jax.Array, M: int) -> tuple[jax.Array, int]:
+    """(n, ...) -> ((M, ceil(n/M), ...), n): zero-pad to the block layout.
+
+    For *query* batches only: query rows are independent in every predictive
+    equation, so padded rows produce garbage predictions for themselves and
+    affect nothing else — callers slice outputs back to the returned valid
+    count ``n``. (Training data must not be padded; see Runner.shard_blocks.)
+    """
+    n = X.shape[0]
+    b = -(-n // M)                    # ceil(n / M)
+    pad = M * b - n
+    if pad:
+        widths = [(0, pad)] + [(0, 0)] * (X.ndim - 1)
+        X = jnp.pad(X, widths)
+    return X.reshape((M, b) + X.shape[1:]), n
 
 
 def make_runner(mode: str, *, M: int | None = None, mesh: Mesh | None = None,

@@ -1,0 +1,293 @@
+"""fit -> PosteriorState -> predict_batch architecture (core/api.py):
+registry, state caching vs legacy one-shot wrappers, query padding, the
+microbatching server, and online state hot-swap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, gp, online, picf, pitc, ppic, ppitc
+from repro.launch.gp_serve import GPServer, default_buckets
+from repro.parallel.runner import VmapRunner, pad_blocks
+
+from helpers import make_problem
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_problem()
+
+
+@pytest.fixture(scope="module")
+def runner(prob):
+    return VmapRunner(M=prob["M"])
+
+
+class TestRegistry:
+    def test_core_methods_registered(self):
+        assert {"fgp", "pitc", "pic", "ppitc", "ppic", "picf"} <= \
+            set(api.names())
+
+    def test_unknown_method_raises(self):
+        with pytest.raises(ValueError, match="unknown GP method"):
+            api.get("svgp")
+
+    def test_fit_front_door(self, prob, runner):
+        model = api.fit("ppitc", prob["kfn"], prob["params"], prob["X"],
+                        prob["y"], S=prob["S"], runner=runner)
+        assert isinstance(model.state, api.PITCState)
+        mean, var = model.predict_diag(prob["U"])
+        assert mean.shape == var.shape == (prob["U"].shape[0],)
+        assert float(var.min()) > 0
+
+
+class TestStateCaching:
+    """Satellite: fit once + predict_batch twice is bit-identical to the
+    legacy one-shot wrappers (which ARE fit + predict by construction)."""
+
+    def test_fgp(self, prob):
+        st = gp.fit(prob["kfn"], prob["params"], prob["X"], prob["y"])
+        p1 = gp.predict_batch(prob["kfn"], prob["params"], st, prob["U"])
+        p2 = gp.predict_batch(prob["kfn"], prob["params"], st, prob["U"])
+        legacy = gp.predict(prob["kfn"], prob["params"], prob["X"],
+                            prob["y"], prob["U"])
+        np.testing.assert_array_equal(p1.mean, p2.mean)
+        np.testing.assert_array_equal(p1.cov, p2.cov)
+        np.testing.assert_array_equal(p1.mean, legacy.mean)
+        np.testing.assert_array_equal(p1.cov, legacy.cov)
+
+    def test_pitc(self, prob):
+        st = pitc.fit(prob["kfn"], prob["params"], prob["X"], prob["y"],
+                      S=prob["S"], M=prob["M"])
+        p1 = ppitc.predict_batch(prob["kfn"], prob["params"], st, prob["U"])
+        p2 = ppitc.predict_batch(prob["kfn"], prob["params"], st, prob["U"])
+        legacy = pitc.pitc_predict_blockwise(
+            prob["kfn"], prob["params"], prob["S"], prob["X"], prob["y"],
+            prob["U"], prob["M"])
+        np.testing.assert_array_equal(p1.mean, p2.mean)
+        np.testing.assert_array_equal(p1.mean, legacy.mean)
+        np.testing.assert_array_equal(p1.cov, legacy.cov)
+
+    def test_ppitc(self, prob, runner):
+        st = ppitc.fit(prob["kfn"], prob["params"], prob["X"], prob["y"],
+                       S=prob["S"], runner=runner)
+        p1 = ppitc.predict_blocks(prob["kfn"], prob["params"], st, prob["U"],
+                                  prob["M"])
+        p2 = ppitc.predict_blocks(prob["kfn"], prob["params"], st, prob["U"],
+                                  prob["M"])
+        legacy = ppitc.predict(prob["kfn"], prob["params"], prob["S"],
+                               prob["X"], prob["y"], prob["U"], runner)
+        np.testing.assert_array_equal(p1.mean, p2.mean)
+        np.testing.assert_array_equal(p1.blocks, p2.blocks)
+        np.testing.assert_array_equal(p1.mean, legacy.mean)
+        np.testing.assert_array_equal(p1.blocks, legacy.blocks)
+
+    def test_ppic(self, prob, runner):
+        st = ppic.fit(prob["kfn"], prob["params"], prob["X"], prob["y"],
+                      S=prob["S"], runner=runner)
+        p1 = ppic.predict_blocks(prob["kfn"], prob["params"], st, prob["U"])
+        p2 = ppic.predict_blocks(prob["kfn"], prob["params"], st, prob["U"])
+        legacy = ppic.predict(prob["kfn"], prob["params"], prob["S"],
+                              prob["X"], prob["y"], prob["U"], runner)
+        np.testing.assert_array_equal(p1.mean, p2.mean)
+        np.testing.assert_array_equal(p1.blocks, p2.blocks)
+        np.testing.assert_array_equal(p1.mean, legacy.mean)
+        np.testing.assert_array_equal(p1.blocks, legacy.blocks)
+        # predict_batch is the type-stable dense view of the same posterior
+        dense = ppic.predict_batch(prob["kfn"], prob["params"], st, prob["U"])
+        np.testing.assert_array_equal(dense.mean, p1.mean)
+        np.testing.assert_array_equal(dense.cov, p1.cov)
+
+    def test_picf(self, prob, runner):
+        st = picf.fit(prob["kfn"], prob["params"], prob["X"], prob["y"],
+                      rank=48, runner=runner)
+        p1 = picf.predict_batch(prob["kfn"], prob["params"], st, prob["U"])
+        p2 = picf.predict_batch(prob["kfn"], prob["params"], st, prob["U"])
+        legacy = picf.predict(prob["kfn"], prob["params"], prob["X"],
+                              prob["y"], prob["U"], 48, runner)
+        np.testing.assert_array_equal(p1.mean, p2.mean)
+        np.testing.assert_array_equal(p1.mean, legacy.mean)
+        np.testing.assert_array_equal(p1.cov, legacy.cov)
+
+    def test_diag_matches_full(self, prob, runner):
+        """predict_diag agrees with diag(predict cov) for every method."""
+        cases = [
+            ("fgp", {}),
+            ("pitc", dict(S=prob["S"], M=prob["M"])),
+            ("ppitc", dict(S=prob["S"], runner=runner)),
+            ("ppic", dict(S=prob["S"], runner=runner)),
+            ("picf", dict(rank=48, runner=runner)),
+        ]
+        for name, kw in cases:
+            model = api.fit(name, prob["kfn"], prob["params"], prob["X"],
+                            prob["y"], **kw)
+            post = model.predict(prob["U"])
+            mean, var = model.predict_diag(prob["U"])
+            np.testing.assert_allclose(mean, post.mean, atol=1e-9,
+                                       err_msg=name)
+            np.testing.assert_allclose(var, post.var, atol=1e-8,
+                                       err_msg=name)
+
+
+class TestQueryPadding:
+    def test_shard_blocks_raises_with_fix(self, runner):
+        X = jnp.zeros((17, 3))
+        with pytest.raises(ValueError, match="pad_blocks"):
+            runner.shard_blocks(X)
+
+    def test_pitc_blocks_raises_with_fix(self):
+        with pytest.raises(ValueError, match="pad_blocks"):
+            pitc._blocks(17, 4)
+
+    def test_pad_blocks_roundtrip(self):
+        X = jnp.arange(17 * 3, dtype=jnp.float64).reshape(17, 3)
+        Xb, n = pad_blocks(X, 4)
+        assert Xb.shape == (4, 5, 3) and n == 17
+        np.testing.assert_array_equal(Xb.reshape(20, 3)[:17], X)
+        np.testing.assert_array_equal(Xb.reshape(20, 3)[17:], 0.0)
+
+    def test_pad_blocks_exact_division_is_noop(self):
+        X = jnp.arange(16 * 3, dtype=jnp.float64).reshape(16, 3)
+        Xb, n = pad_blocks(X, 4)
+        assert Xb.shape == (4, 4, 3) and n == 16
+        np.testing.assert_array_equal(Xb.reshape(16, 3), X)
+
+    def test_ppitc_serves_any_batch_size(self, prob, runner):
+        """PITC posteriors are query-independent: odd slices match."""
+        st = ppitc.fit(prob["kfn"], prob["params"], prob["X"], prob["y"],
+                       S=prob["S"], runner=runner)
+        full_m, full_v = ppitc.predict_batch_diag(prob["kfn"], prob["params"],
+                                                  st, prob["U"])
+        for u in (1, 7, 17):
+            m, v = ppitc.predict_batch_diag(prob["kfn"], prob["params"], st,
+                                            prob["U"][:u])
+            np.testing.assert_allclose(m, full_m[:u], atol=1e-12)
+            np.testing.assert_allclose(v, full_v[:u], atol=1e-12)
+
+    def test_ppic_serves_any_batch_size(self, prob, runner):
+        """pPIC pads the query batch to the block layout and trims."""
+        st = ppic.fit(prob["kfn"], prob["params"], prob["X"], prob["y"],
+                      S=prob["S"], runner=runner)
+        U17 = prob["U"][:17]
+        m, v = ppic.predict_batch_diag(prob["kfn"], prob["params"], st, U17)
+        assert m.shape == v.shape == (17,)
+        assert bool(jnp.all(jnp.isfinite(m))) and float(v.min()) > 0
+        # diag path agrees with the (padded, trimmed) full-cov path
+        post = ppic.predict_batch(prob["kfn"], prob["params"], st, U17)
+        np.testing.assert_allclose(m, post.mean, atol=1e-12)
+        np.testing.assert_allclose(v, jnp.diag(post.cov), atol=1e-10)
+
+
+class TestGPServer:
+    def test_microbatch_matches_direct(self, prob, runner):
+        model = api.fit("ppitc", prob["kfn"], prob["params"], prob["X"],
+                        prob["y"], S=prob["S"], runner=runner)
+        srv = GPServer(model, max_batch=16)
+        tickets = [srv.submit(prob["U"][i]) for i in range(5)]
+        direct_m, direct_v = model.predict_diag(prob["U"][:5])
+        for i, t in enumerate(tickets):
+            m, v = srv.result(t)
+            np.testing.assert_allclose(m, direct_m[i], atol=1e-12)
+            np.testing.assert_allclose(v, direct_v[i], atol=1e-12)
+
+    def test_auto_flush_at_max_batch(self, prob, runner):
+        model = api.fit("ppitc", prob["kfn"], prob["params"], prob["X"],
+                        prob["y"], S=prob["S"], runner=runner)
+        srv = GPServer(model, max_batch=8)
+        for i in range(8):
+            srv.submit(prob["U"][i])
+        assert srv.pending == 0          # flushed on the 8th submit
+        assert srv.stats.n_batches == 1
+
+    def test_bucket_padding(self):
+        assert default_buckets(64) == (8, 16, 32, 64)
+        assert default_buckets(8) == (8,)
+
+    def test_oversized_batch(self, prob, runner):
+        model = api.fit("ppitc", prob["kfn"], prob["params"], prob["X"],
+                        prob["y"], S=prob["S"], runner=runner)
+        srv = GPServer(model, max_batch=8)
+        m, v = srv.predict(prob["U"])    # u=24 > max bucket 8 -> pads to 24
+        ref_m, ref_v = model.predict_diag(prob["U"])
+        np.testing.assert_allclose(m, ref_m, atol=1e-12)
+        np.testing.assert_allclose(v, ref_v, atol=1e-12)
+
+    def test_hot_swap_after_assimilate(self, prob, runner):
+        """swap_state under live traffic == cold fit on all data."""
+        p = prob
+        n1 = p["X"].shape[0] // 2
+        store = online.build(p["kfn"], p["params"], p["S"], p["X"][:n1],
+                             p["y"][:n1], runner)
+        model = api.get("ppitc")
+        fitted = api.FittedGP(model, p["kfn"], p["params"],
+                              online.to_state(store, p["S"]))
+        srv = GPServer(fitted, max_batch=8)
+        m_before, _ = srv.predict(p["U"][:8])
+
+        store = online.assimilate(store, p["kfn"], p["params"], p["S"],
+                                  p["X"][n1:], p["y"][n1:], runner)
+        srv.swap_state(online.to_state(store, p["S"]))
+        m_after, v_after = srv.predict(p["U"][:8])
+
+        cold = ppitc.fit(p["kfn"], p["params"], p["X"], p["y"], S=p["S"],
+                         runner=VmapRunner(M=2 * p["M"]))
+        ref_m, ref_v = ppitc.predict_batch_diag(p["kfn"], p["params"], cold,
+                                                p["U"][:8])
+        np.testing.assert_allclose(m_after, ref_m, atol=1e-9)
+        np.testing.assert_allclose(v_after, ref_v, atol=1e-9)
+        assert float(jnp.abs(m_after - m_before).max()) > 1e-6
+        assert srv.stats.n_state_swaps == 1
+
+    def test_hot_swap_after_retire(self, prob, runner):
+        p = prob
+        store = online.build(p["kfn"], p["params"], p["S"], p["X"], p["y"],
+                             runner)
+        fitted = api.FittedGP(api.get("ppitc"), p["kfn"], p["params"],
+                              online.to_state(store, p["S"]))
+        srv = GPServer(fitted, max_batch=8)
+        srv.swap_state(online.to_state(online.retire(store, 1), p["S"]))
+        m, _ = srv.predict(p["U"][:8])
+        b = p["X"].shape[0] // p["M"]
+        keep = jnp.concatenate([jnp.arange(0, b),
+                                jnp.arange(2 * b, p["X"].shape[0])])
+        surv = ppitc.fit(p["kfn"], p["params"], p["X"][keep], p["y"][keep],
+                         S=p["S"], runner=VmapRunner(M=p["M"] - 1))
+        ref, _ = ppitc.predict_batch_diag(p["kfn"], p["params"], surv,
+                                          p["U"][:8])
+        np.testing.assert_allclose(m, ref, atol=1e-9)
+
+
+class TestOnlineStateAlgebra:
+    """Satellite: summary algebra in core/online.py through the state path."""
+
+    def test_assimilate_retire_revive_roundtrip(self, prob, runner):
+        p = prob
+        n1 = p["X"].shape[0] // 2
+        store = online.build(p["kfn"], p["params"], p["S"], p["X"][:n1],
+                             p["y"][:n1], runner)
+        store = online.assimilate(store, p["kfn"], p["params"], p["S"],
+                                  p["X"][n1:], p["y"][n1:], runner)
+        for m in range(2 * p["M"]):
+            store = online.revive(online.retire(store, m), m)
+        st = online.to_state(store, p["S"])
+        fresh = online.build(p["kfn"], p["params"], p["S"], p["X"], p["y"],
+                             VmapRunner(M=2 * p["M"]))
+        st_fresh = online.to_state(fresh, p["S"])
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st_fresh)):
+            np.testing.assert_allclose(a, b, atol=1e-10)
+
+    def test_retired_machine_equals_ppitc_on_survivors(self, prob, runner):
+        p = prob
+        store = online.retire(
+            online.build(p["kfn"], p["params"], p["S"], p["X"], p["y"],
+                         runner), 2)
+        st = online.to_state(store, p["S"])
+        post = ppitc.predict_batch(p["kfn"], p["params"], st, p["U"])
+        b = p["X"].shape[0] // p["M"]
+        keep = jnp.concatenate([jnp.arange(0, 2 * b),
+                                jnp.arange(3 * b, p["X"].shape[0])])
+        surv = ppitc.fit(p["kfn"], p["params"], p["X"][keep], p["y"][keep],
+                         S=p["S"], runner=VmapRunner(M=p["M"] - 1))
+        ref = ppitc.predict_batch(p["kfn"], p["params"], surv, p["U"])
+        np.testing.assert_allclose(post.mean, ref.mean, atol=1e-9)
+        np.testing.assert_allclose(post.cov, ref.cov, atol=1e-9)

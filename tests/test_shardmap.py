@@ -50,6 +50,32 @@ close(support.select_support_parallel(kfn, params, X, 8, sm),
 close(hyper.pitc_nlml(kfn, params, S, X, y, sm),
       hyper.pitc_nlml(kfn, params, S, X, y, vm), 1e-8)
 
+# fully-collective execution (psum inside the per-machine program)
+a, b = ppitc.predict_distributed(kfn, params, S, X, y, U, sm), \
+    ppitc.predict_distributed(kfn, params, S, X, y, U, vm)
+close(a.mean, b.mean); close(a.blocks, b.blocks)
+a, b = ppic.predict_distributed(kfn, params, S, X, y, U, sm), \
+    ppic.predict_distributed(kfn, params, S, X, y, U, vm)
+close(a.mean, b.mean); close(a.blocks, b.blocks)
+a, b = picf.predict_distributed(kfn, params, X, y, U, 48, sm), \
+    picf.predict_distributed(kfn, params, X, y, U, 48, vm)
+close(a.mean, b.mean); close(a.cov, b.cov)
+
+# PosteriorState round-trip: both runners' fit paths produce the same pytree
+import jax.tree_util as jtu
+def close_tree(ta, tb, tol=1e-10):
+    la, lb = jax.tree.leaves(ta), jax.tree.leaves(tb)
+    assert jtu.tree_structure(ta) == jtu.tree_structure(tb)
+    assert len(la) == len(lb)
+    for x, z in zip(la, lb):
+        close(x, z, tol)
+close_tree(ppitc.fit(kfn, params, X, y, S=S, runner=sm),
+           ppitc.fit(kfn, params, X, y, S=S, runner=vm))
+close_tree(ppic.fit(kfn, params, X, y, S=S, runner=sm),
+           ppic.fit(kfn, params, X, y, S=S, runner=vm))
+close_tree(picf.fit(kfn, params, X, y, rank=48, runner=sm),
+           picf.fit(kfn, params, X, y, rank=48, runner=vm))
+
 # two-axis machines: ("pod", "data") as in the production mesh
 mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
 sm2 = ShardMapRunner(mesh=mesh2, axis_name=("pod", "data"))
