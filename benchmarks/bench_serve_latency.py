@@ -1,5 +1,6 @@
 """Real-time serving: cold one-shot prediction vs amortized cached-state
-prediction vs batch size (core/api.py + launch/gp_serve.py).
+prediction vs batch size, plus the routed/deadline serving path
+(core/api.py + launch/gp_serve.py).
 
 What the paper's real-time claim cashes out to in this codebase:
 
@@ -8,22 +9,32 @@ What the paper's real-time claim cashes out to in this codebase:
 * fit        — one-time cost of building the cached ``PosteriorState``;
 * amortized  — jitted ``predict_batch_diag`` over the cached state:
   O(|U||S| + |S|^2) per call, the per-query latency a serving deployment
-  actually pays, swept over microbatch sizes.
+  actually pays, swept over microbatch sizes;
+* routed     — ``ppic.predict_routed_diag`` through a routed ``GPServer``:
+  the batch-composition-invariant pPIC path (Remark 2);
+* p99        — ticket latency under a low arrival rate, size-only trigger
+  vs the deadline-driven flusher. Arrivals tick a virtual clock; real
+  flush compute is folded in, so the comparison captures queueing delay
+  plus actual predict cost.
 
-Acceptance gate (full size, vmap runner, CPU): amortized repeated-query
-prediction must be >= 5x faster than the cold path at n=4096, M=8, with
-posteriors matching the legacy path to allclose(rtol=1e-5). The gate is
-asserted here so `python -m benchmarks.run --only serve` fails loudly on a
-caching regression.
+Acceptance gates (asserted so `python -m benchmarks.run --only serve` fails
+loudly on a regression):
+
+* amortized repeated-query prediction >= 5x faster than the cold path at
+  n=4096, M=8 (full size only), posteriors allclose to the legacy path;
+* the deadline flusher's p99 ticket latency beats the size-only trigger at
+  low arrival rates (every size).
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import api, covariance as cov, ppitc, support
+from repro.core import api, covariance as cov, ppic, ppitc, support
 from repro.data import synthetic
 from repro.launch.gp_serve import GPServer
 from repro.parallel.runner import VmapRunner
@@ -33,6 +44,53 @@ from benchmarks import common
 N, M, S_SIZE = 4096, 8, 128
 BATCHES = (1, 8, 64, 256)
 SPEEDUP_GATE = 5.0
+
+
+def p99_ticket_latency_ms(model, U, *, n_req: int, interarrival_ms: float,
+                          max_batch: int, deadline_ms: float | None,
+                          routed: bool = False) -> float:
+    """Simulated serving loop: one request every ``interarrival_ms`` on a
+    virtual clock, ``pump()`` between arrivals. Each step ``sync()``s the
+    server before advancing the clock by the real elapsed time, so flush
+    dispatch AND device compute are both charged to ticket latency (flushes
+    are async — without the barrier only host dispatch would be measured).
+    Returns the p99 of per-ticket latency (ms)."""
+    t = [0.0]
+    srv = GPServer(model, max_batch=max_batch, flush_deadline_ms=deadline_ms,
+                   routed=routed, clock=lambda: t[0])
+    # steady-state measurement: pre-compile every bucket the sim can hit so
+    # one-time XLA compilation doesn't masquerade as queueing latency
+    for bucket in srv.buckets:
+        jax.block_until_ready(srv.predict(U[:min(bucket, U.shape[0])])[0])
+    submit_at: dict[int, float] = {}
+    done_at: dict[int, float] = {}
+
+    def harvest():
+        for tk in list(submit_at):
+            if tk not in done_at and srv.done(tk):
+                done_at[tk] = t[0]
+
+    def step(fn):
+        """Run one serving action, charge its real wall time (including
+        materializing any flushed results) to the virtual clock, then stamp
+        newly-finished tickets at the post-compute clock."""
+        w0 = time.perf_counter()
+        out = fn()
+        srv.sync()
+        t[0] += time.perf_counter() - w0
+        harvest()
+        return out
+
+    for i in range(n_req):
+        t_arrival = t[0]                   # before any flush compute
+        tk = step(lambda: srv.submit(U[i % U.shape[0]]))
+        submit_at[tk] = t_arrival
+        step(srv.pump)
+        t[0] += interarrival_ms * 1e-3
+        step(srv.pump)
+    step(srv.flush)                        # drain the tail
+    lats = [(done_at[tk] - submit_at[tk]) * 1e3 for tk in submit_at]
+    return float(np.percentile(lats, 99))
 
 
 def run(quick: bool = False, smoke: bool = False):
@@ -101,6 +159,44 @@ def run(quick: bool = False, smoke: bool = False):
         t = common.timeit(lambda: srv.predict(Ub)[0])
         common.emit(f"serve/batch{u}/n{n}", t,
                     f"per_query_us={t / u:.1f}")
+
+    # --- routed pPIC serving: composition-invariant, centroid-dispatched ---
+    pic_state = ppic.fit(kfn, params, ds.X, ds.y, S=S, runner=runner)
+    pic_model = api.FittedGP(api.get("ppic"), kfn, params, pic_state)
+    srv_routed = GPServer(pic_model, max_batch=max(batches), routed=True)
+    u_r = min(48, ds.X_test.shape[0])
+    Ur = ds.X_test[:u_r]
+    t_routed = common.timeit(lambda: srv_routed.predict(Ur)[0])
+    pos_fn = jax.jit(partial(ppic.predict_batch_diag, kfn))
+    t_pos = common.timeit(lambda: pos_fn(params, pic_state, Ur)[0])
+    common.emit(f"serve/routed{u_r}/n{n}", t_routed,
+                f"positional_us={t_pos:.1f}")
+    # routed-through-server == direct routed call (bucket padding is inert)
+    m_r, v_r = srv_routed.predict(Ur)
+    ref_m, ref_v = ppic.predict_routed_diag(kfn, params, pic_state, Ur)
+    assert jnp.allclose(m_r, ref_m, rtol=1e-5, atol=1e-5), \
+        float(jnp.abs(m_r - ref_m).max())
+    assert jnp.allclose(v_r, ref_v, rtol=1e-4, atol=1e-5), \
+        float(jnp.abs(v_r - ref_v).max())
+    # composition invariance at bench scale: a permuted batch permutes output
+    perm = np.random.RandomState(0).permutation(u_r)
+    m_p, _ = ppic.predict_routed_diag(kfn, params, pic_state, Ur[perm])
+    np.testing.assert_array_equal(np.asarray(m_p), np.asarray(ref_m)[perm])
+
+    # --- deadline flusher vs size-only trigger: p99 at low arrival rate ----
+    # max_batch=64 + 2ms interarrival: the size trigger alone would hold the
+    # oldest ticket ~126ms; a 20ms deadline caps that regardless of traffic
+    n_req = 96 if smoke else 256
+    sim = dict(n_req=n_req, interarrival_ms=2.0, max_batch=64, routed=True)
+    p99_size = p99_ticket_latency_ms(pic_model, Ur, deadline_ms=None, **sim)
+    p99_dead = p99_ticket_latency_ms(pic_model, Ur, deadline_ms=20.0, **sim)
+    common.emit(f"serve/p99_size_only/n{n}", p99_size * 1e3,
+                f"p99_ms={p99_size:.1f}")
+    common.emit(f"serve/p99_deadline20/n{n}", p99_dead * 1e3,
+                f"p99_ms={p99_dead:.1f}")
+    assert p99_dead < p99_size, \
+        (f"deadline flusher p99 {p99_dead:.1f}ms not below size-only "
+         f"trigger p99 {p99_size:.1f}ms at low arrival rate")
 
     return speedup
 

@@ -19,7 +19,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="toy sizes for every suite — exercises the whole "
-                         "harness in seconds (CI)")
+                         "harness in seconds (CI), including the routed "
+                         "serve path and the deadline-flusher p99 "
+                         "simulation")
     ap.add_argument("--only", default=None,
                     help="substring filter: fig1|fig2|fig3|table1|fault|"
                          "kernel|serve|lm")

@@ -42,6 +42,12 @@ model = api.fit("ppic", kfn, params, jnp.asarray(Xc), jnp.asarray(yc),
 post = model.predict(jnp.asarray(Uc))
 mean = jnp.asarray(clustering.uncluster(np.asarray(post.mean), perm_u))
 
+# 5b. the same posterior without pre-clustering the queries: routed
+#     prediction sends each query to its nearest block centroid (Remark 2
+#     at serving time) — order/composition-invariant, no permutation
+#     bookkeeping (see examples/routed_traffic_serve.py for the server)
+routed_mean, _ = model.predict_routed_diag(ds.X_test)
+
 # 6. compare with the exact O(n^3) full GP (also through the registry)
 exact_model = api.fit("fgp", kfn, params, ds.X, ds.y)
 exact_mean, exact_var = exact_model.predict_diag(ds.X_test)
@@ -49,6 +55,7 @@ exact_mean, exact_var = exact_model.predict_diag(ds.X_test)
 rmse = lambda m: float(jnp.sqrt(jnp.mean((m - ds.y_test) ** 2)))
 print(f"methods registered: {api.names()}")
 print(f"pPIC  (M={M})  rmse={rmse(mean):.4f}")
+print(f"pPIC routed    rmse={rmse(routed_mean):.4f}")
 print(f"full GP        rmse={rmse(exact_mean):.4f}")
 print(f"mean |pPIC - FGP| = {float(jnp.abs(mean - exact_mean).mean()):.4f}")
 print(f"pPIC mean variance = {float(post.var.mean()):.4f} (>0, calibrated)")

@@ -1,0 +1,75 @@
+"""Centroid-routed pPIC serving with a deadline-driven flusher.
+
+Queries from live traffic arrive in arbitrary order, so the positional
+query-block assignment of ``ppic.predict_batch`` would give each request a
+posterior that depends on what else happened to share its microbatch. The
+routed path (Remark 2) dispatches every query to the block whose fit-time
+centroid it is nearest — the posterior becomes a pure function of (query,
+state) — and the deadline flusher bounds how long a lone request can wait
+for company before the server predicts anyway.
+
+    PYTHONPATH=src python examples/routed_traffic_serve.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, covariance as cov, ppic, support
+from repro.data import synthetic
+from repro.launch.gp_serve import GPServer
+from repro.parallel.runner import VmapRunner
+
+
+def main():
+    key = jax.random.PRNGKey(3)
+    n, M, s = 2048, 8, 64
+    ds = synthetic.standardize(synthetic.aimpeak_like(key, n=n, n_test=256))
+    kfn = cov.make_kernel("se")
+    params = cov.init_params(5, signal=1.0, noise=0.3, lengthscale=1.2)
+    S = support.select_support(kfn, params, ds.X[:1024], s)
+
+    model = api.fit("ppic", kfn, params, ds.X, ds.y, S=S,
+                    runner=VmapRunner(M=M))
+    print(f"fitted pPIC: n={n} M={M} |S|={s}; "
+          f"block centroids cached: {model.state.centroids.shape}")
+
+    # traffic simulation: requests trickle in one at a time on a virtual
+    # clock; the deadline (not the batch size) decides when to predict
+    t = [0.0]
+    server = GPServer(model, max_batch=64, flush_deadline_ms=25.0,
+                      routed=True, clock=lambda: t[0])
+    rng = np.random.RandomState(0)
+    order = rng.permutation(ds.X_test.shape[0])
+    tickets = {}
+    for i in order:
+        tickets[int(i)] = server.submit(ds.X_test[int(i)])
+        t[0] += 0.004                      # 4 ms between arrivals
+        server.pump()                      # idle loop: deadline check
+    server.flush()                         # drain the tail
+
+    mean = np.stack([np.asarray(server.result(tk)[0])
+                     for tk in (tickets[i] for i in range(len(tickets)))])
+    rmse = float(np.sqrt(np.mean((mean - np.asarray(ds.y_test)) ** 2)))
+    st = server.stats
+    print(f"served {st.n_requests} tickets in {st.n_batches} microbatches "
+          f"(deadline flushes: {st.n_deadline_flushes}, size: "
+          f"{st.n_size_flushes}, manual: {st.n_manual_flushes})")
+    print(f"rmse={rmse:.4f}")
+
+    # composition invariance: the shuffled trickle (arbitrary microbatch
+    # boundaries) reproduces the whole-batch routed posterior to roundoff —
+    # with the positional path this deviation would be O(posterior scale)
+    ref_mean, _ = ppic.predict_routed_diag(kfn, params, model.state,
+                                           ds.X_test)
+    dev = float(np.abs(mean - np.asarray(ref_mean)).max())
+    pos_mean, _ = ppic.predict_batch_diag(kfn, params, model.state,
+                                          ds.X_test[order])
+    pos_dev = float(np.abs(np.asarray(pos_mean)
+                           - np.asarray(ref_mean)[order]).max())
+    print(f"routed trickle vs whole-batch:     max |dmean| = {dev:.2e}")
+    print(f"positional shuffle vs whole-batch: max |dmean| = {pos_dev:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,7 +52,12 @@ class PITCState(NamedTuple):
 
 class PICState(NamedTuple):
     """PIC/pPIC: PITC globals + per-block caches for the local correction
-    (eqs. 12-14). Leading axis of the block fields is the machine axis M."""
+    (eqs. 12-14). Leading axis of the block fields is the machine axis M.
+
+    ``centroids`` realizes Remark 2 on the serving side: the per-block data
+    centroids fixed at fit time let ``ppic.predict_routed`` assign each query
+    to the block whose local data best explains it, independent of how the
+    query batch happens to be composed."""
     S: jax.Array        # (s, d)
     Kss_L: jax.Array    # (s, s)
     Sdd_L: jax.Array    # (s, s)
@@ -66,6 +71,7 @@ class PICState(NamedTuple):
     beta: jax.Array     # (M, s)    Kss^{-1} ydot_m
     B: jax.Array        # (M, s, s) Kss^{-1} Sdot_m
     Sdot: jax.Array     # (M, s, s) local summaries (eq. 4)
+    centroids: jax.Array  # (M, d)  block centroids (query routing targets)
 
 
 class PICFState(NamedTuple):
@@ -91,11 +97,22 @@ class GPMethod:
     method's native posterior (GPPosterior or ParallelPosterior);
     ``predict_diag`` always returns a (mean, var) pair of (u,) arrays and
     accepts query batches of any size (block methods pad internally).
+
+    ``predict_routed_diag`` (optional) is the batch-composition-invariant
+    serving path: each query is assigned to its nearest-centroid block
+    (Remark 2) instead of positionally, so a query's (mean, var) depends only
+    on the query point and the fitted state — never on what else happened to
+    arrive in the same microbatch. Methods whose posterior is already
+    query-independent of the block layout (fgp/pitc/ppitc/picf) leave it
+    ``None``: ``FittedGP.predict_routed_diag`` raises for them and
+    ``GPServer(routed=True)`` rejects them at construction — their
+    ``predict_diag`` already has the invariance routing buys.
     """
     name: str
     fit: Callable[..., Any]
     predict: Callable[..., Any]        # (kfn, params, state, U) -> posterior
     predict_diag: Callable[..., Any]   # (kfn, params, state, U) -> (mean, var)
+    predict_routed_diag: Callable[..., Any] | None = None
 
 
 REGISTRY: dict[str, GPMethod] = {}
@@ -142,6 +159,16 @@ class FittedGP:
 
     def predict_diag(self, U: jax.Array):
         return self.method.predict_diag(self.kfn, self.params, self.state, U)
+
+    def predict_routed_diag(self, U: jax.Array):
+        """Centroid-routed (mean, var) — batch-composition-invariant."""
+        if self.method.predict_routed_diag is None:
+            raise ValueError(
+                f"method {self.method.name!r} has no routed prediction path; "
+                f"its posterior does not depend on query-block assignment — "
+                f"use predict_diag")
+        return self.method.predict_routed_diag(self.kfn, self.params,
+                                               self.state, U)
 
     def with_state(self, state) -> "FittedGP":
         """Hot-swap the cached posterior (online assimilate/retire)."""

@@ -13,6 +13,7 @@ best-distance order — O(n log n), deterministic given the key.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -31,10 +32,14 @@ def capacity_assign(X: np.ndarray, centers: np.ndarray,
 
     Points are processed in order of their best-center distance (closest
     first); a full machine falls through to the next-nearest center.
-    Returns machine id per point; every machine gets exactly ``capacity``.
+    Returns machine id per point; no machine exceeds ``capacity``, and when
+    ``n == M * capacity`` every machine is filled exactly. ``n`` need not
+    divide ``M`` — pass ``capacity = ceil(n / M)`` and the trailing slack is
+    absorbed by whichever machines the greedy fill leaves short.
     """
     n, M = X.shape[0], centers.shape[0]
-    assert n == M * capacity, "capacity must evenly fill all machines"
+    assert n <= M * capacity, \
+        f"M * capacity = {M * capacity} cannot hold n = {n} points"
     d2 = ((X[:, None, :] - centers[None, :, :]) ** 2).sum(-1)   # (n, M)
     pref = np.argsort(d2, axis=1)                               # (n, M)
     order = np.argsort(d2.min(axis=1))
@@ -66,3 +71,20 @@ def uncluster(values: np.ndarray, perm: np.ndarray) -> np.ndarray:
     out = np.empty_like(values)
     out[perm] = values
     return out
+
+
+def block_centroids(Xb) -> jax.Array:
+    """(M, b, d) block layout -> (M, d) per-block data centroids.
+
+    Unlike the rest of this module (host-side pipeline steps), this runs in
+    jnp: the result is a ``PICState`` pytree leaf, built at fit time from
+    device-resident blocks.
+
+    These are the serving-side routing targets cached in ``api.PICState``:
+    at predict time a query goes to the block whose centroid it is nearest
+    (Remark 2 applied to queries that arrive after fit). The mean is the
+    natural summary of "whose local data best explains this query" for
+    stationary kernels — nearest centroid maximizes the expected local
+    cross-covariance against the block.
+    """
+    return jnp.mean(Xb, axis=1)

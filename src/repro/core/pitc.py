@@ -106,6 +106,42 @@ def pic_predict_literal(kfn, params, S, X_train, y_train, X_test,
     return GPPosterior(mean, covm)
 
 
+def pic_predict_literal_routed(kfn, params, S, X_train, y_train, X_test,
+                               M: int, assign) -> GPPosterior:
+    """Eqs. (15)-(18) with the i = m branch of eq. (18) chosen per query by
+    ``assign`` (u,) — the centralized oracle for centroid-routed pPIC.
+
+    ``pic_predict_literal`` hardcodes positional query blocks; here query i
+    takes the exact cross-covariance against training block ``assign[i]``
+    and the low-rank Gamma against every other block, which is exactly what
+    ``ppic.predict_routed`` computes from cached factors
+    (tests/test_routing_equivalence.py).
+    """
+    n = X_train.shape[0]
+    assign = jnp.asarray(assign)
+    Kss_L = linalg.chol(kfn(params, S, S))
+    G_dd = _gamma(kfn, params, S, X_train, X_train, Kss_L)
+    G_ud = _gamma(kfn, params, S, X_test, X_train, Kss_L)
+    K_ud = kfn(params, X_test, X_train)
+
+    K_dd = cov.add_noise(kfn(params, X_train, X_train), params)
+    Sig_dd_s = K_dd - G_dd
+    Lam = jnp.zeros_like(Sig_dd_s)
+    for db in _blocks(n, M):
+        Lam = Lam.at[db, db].set(Sig_dd_s[db, db])
+
+    # eq. (18): routed i = m branch — data column j belongs to block j // b
+    b = n // M
+    routed = assign[:, None] == (jnp.arange(n)[None, :] // b)
+    Gt_ud = jnp.where(routed, K_ud, G_ud)
+
+    A_L = linalg.chol(G_dd + Lam)
+    mean = (Gt_ud @ linalg.chol_solve(A_L, y_train[:, None]))[:, 0]
+    K_uu = kfn(params, X_test, X_test)
+    covm = K_uu - Gt_ud @ linalg.chol_solve(A_L, Gt_ud.T)
+    return GPPosterior(mean, covm)
+
+
 # ---------------------------------------------------------------------------
 # Efficient centralized PITC/PIC — thin wrappers over the shared state path.
 # Same math as the parallel methods but on one process: this is what the
@@ -164,5 +200,11 @@ def _pic_predict_diag(kfn, params, state, U):
     return ppic.predict_batch_diag(kfn, params, state, U)
 
 
+def _pic_predict_routed_diag(kfn, params, state, U):
+    from repro.core import ppic
+    return ppic.predict_routed_diag(kfn, params, state, U)
+
+
 api.register(api.GPMethod("pitc", fit, _pitc_predict, _pitc_predict_diag))
-api.register(api.GPMethod("pic", fit_pic, _pic_predict, _pic_predict_diag))
+api.register(api.GPMethod("pic", fit_pic, _pic_predict, _pic_predict_diag,
+                          _pic_predict_routed_diag))

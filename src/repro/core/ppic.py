@@ -8,10 +8,20 @@ Fit/predict split (core/api.py): ``fit`` caches, per block, the factors the
 local correction needs (Ksd, chol Sigma_{DmDm|S}, C^{-1}y, Kss^{-1}-projected
 summaries) plus the global S-space factors, in an ``api.PICState``. A
 repeated query batch then skips every O(b^3) local Cholesky — only
-cross-covariances and cached triangular solves remain. Query batches are
-assigned to blocks in order and zero-padded when |U| doesn't divide M
-(serving path); co-cluster queries first (core/clustering.py, Remark 2) when
-accuracy matters.
+cross-covariances and cached triangular solves remain. Two query-to-block
+assignment policies:
+
+* positional (``predict_batch``/``predict_batch_diag``) — query blocks are
+  slices of the batch in arrival order, zero-padded when |U| doesn't divide
+  M. Fast, but the posterior of a query depends on where in the batch it sat;
+  co-cluster queries first (core/clustering.py, Remark 2) when accuracy
+  matters.
+* routed (``predict_routed``/``predict_routed_diag``) — each query goes to
+  the block whose fit-time centroid it is nearest (Remark 2 realized at
+  serving time; centroids are cached in the state). A query's posterior then
+  depends only on the query point and the fitted state — invariant to batch
+  order and composition (tests/test_routing_equivalence.py) — which is what
+  arbitrary-traffic serving needs (launch/gp_serve.py).
 
 NB eq. (13) as printed drops a `Phi Sdd^{-1} Phi^T` term; the form implemented
 here is re-derived from Theorem 2 (see core/pitc.py) and verified against the
@@ -22,13 +32,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import api
+from repro.core import api, clustering
 from repro.core import covariance as cov
 from repro.core import linalg
 from repro.core.gp import GPPosterior
 from repro.core.ppitc import (GlobalSummary, LocalSummary, ParallelPosterior,
                               global_summary, local_summary)
-from repro.parallel.runner import Runner, pad_blocks
+from repro.parallel.runner import (Runner, gather_by_block, pad_blocks,
+                                   scatter_by_block)
 
 
 def machine_step(kfn, params, S, Xm, ym, Um, *, axis_name):
@@ -99,7 +110,8 @@ def fit(kfn, params, X, y, *, S, runner: Runner) -> api.PICState:
     ydd = jnp.sum(loc.ydot, axis=0)                    # eq. (5)
     alpha = linalg.chol_solve(Sdd_L, ydd[:, None])[:, 0]
     return api.PICState(S, Kss_L, Sdd_L, alpha, Xb, yb, Ksd, C_L, Wy,
-                        loc.ydot, beta, B, loc.Sdot)
+                        loc.ydot, beta, B, loc.Sdot,
+                        clustering.block_centroids(Xb))
 
 
 def _block_posterior(kfn, params, state: api.PICState, Um, m_fields):
@@ -118,6 +130,24 @@ def _block_posterior(kfn, params, state: api.PICState, Um, m_fields):
                   - Phi @ linalg.chol_solve(state.Sdd_L, Phi.T)
                   - Kus @ linalg.chol_solve(state.Kss_L, Sdot_su)) - Sdot_uu
     return mean, covm
+
+
+def _block_posterior_diag(kfn, params, state: api.PICState, Um, m_fields):
+    """Diagonal of eqs. (12)-(13) for one query block, no |U_m|^2 buffers."""
+    Xm, ym, Ksd, C_L, Wy, ydot, beta, B = m_fields
+    Kus = kfn(params, Um, state.S)
+    Kud = kfn(params, Um, Xm)
+    ydot_u = Kud @ Wy
+    Wd = linalg.chol_solve(C_L, Kud.T)
+    Sdot_su = Ksd @ Wd
+    Phi = Kus + Kus @ B - Sdot_su.T
+    mean = Phi @ state.alpha - Kus @ beta + ydot_u
+    var = (cov.kdiag(kfn, params, Um)
+           - jnp.sum(Phi.T * linalg.chol_solve(state.Kss_L, Kus.T), 0)
+           + jnp.sum(Phi.T * linalg.chol_solve(state.Sdd_L, Phi.T), 0)
+           + jnp.sum(Kus.T * linalg.chol_solve(state.Kss_L, Sdot_su), 0)
+           - jnp.einsum("ub,bu->u", Kud, Wd))
+    return mean, var
 
 
 def _block_fields(state: api.PICState):
@@ -160,26 +190,63 @@ def predict_batch_diag(kfn, params, state: api.PICState, U):
     M = state.Xb.shape[0]
     u = U.shape[0]
     Ub, _ = pad_blocks(U, M)
-
-    def one(Um, *mf):
-        Xm, ym, Ksd, C_L, Wy, ydot, beta, B = mf
-        Kus = kfn(params, Um, state.S)
-        Kud = kfn(params, Um, Xm)
-        ydot_u = Kud @ Wy
-        Wd = linalg.chol_solve(C_L, Kud.T)
-        Sdot_su = Ksd @ Wd
-        Phi = Kus + Kus @ B - Sdot_su.T
-        mean = Phi @ state.alpha - Kus @ beta + ydot_u
-        # diag of eq. (13) without the |U_m|^2 intermediates
-        var = (cov.kdiag(kfn, params, Um)
-               - jnp.sum(Phi.T * linalg.chol_solve(state.Kss_L, Kus.T), 0)
-               + jnp.sum(Phi.T * linalg.chol_solve(state.Sdd_L, Phi.T), 0)
-               + jnp.sum(Kus.T * linalg.chol_solve(state.Kss_L, Sdot_su), 0)
-               - jnp.einsum("ub,bu->u", Kud, Wd))
-        return mean, var
-
+    one = lambda Um, *mf: _block_posterior_diag(kfn, params, state, Um, mf)
     means, vars_ = jax.vmap(one)(Ub, *_block_fields(state))
     return means.reshape(-1)[:u], vars_.reshape(-1)[:u]
+
+
+# ---------------------------------------------------------------------------
+# Routed prediction (Remark 2 at serving time): nearest-centroid assignment.
+# ---------------------------------------------------------------------------
+
+def route_queries(state: api.PICState, U) -> jax.Array:
+    """(u,) block id per query: nearest fit-time block centroid.
+
+    A pure function of (query point, state), so the induced posterior cannot
+    depend on batch order or composition — the serving-side equivalence the
+    positional path lacks.
+    """
+    d2 = jnp.sum((U[:, None, :] - state.centroids[None, :, :]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=1)
+
+
+def predict_routed_diag(kfn, params, state: api.PICState, U):
+    """Batch-composition-invariant (mean, var) for any |U|.
+
+    Scatters the batch to nearest-centroid blocks (capacity |U| per block, so
+    shapes — and the compiled executable — depend only on |U| and M), runs
+    the cached per-block program, and gathers back in caller order.
+    """
+    M = state.Xb.shape[0]
+    assign = route_queries(state, U)
+    Ub, order, block_of, slot = scatter_by_block(U, assign, M)
+    one = lambda Um, *mf: _block_posterior_diag(kfn, params, state, Um, mf)
+    means, vars_ = jax.vmap(one)(Ub, *_block_fields(state))
+    return (gather_by_block(means, order, block_of, slot),
+            gather_by_block(vars_, order, block_of, slot))
+
+
+def predict_routed(kfn, params, state: api.PICState, U) -> GPPosterior:
+    """Routed posterior with the dense within-block covariance view.
+
+    Mean/variance are the routed per-query values; covariance entries are
+    filled for query pairs routed to the same block (eqs. 12-14) and zero
+    across blocks — the routed analogue of ``predict_batch``'s
+    block-diagonal dense view.
+    """
+    u = U.shape[0]
+    M = state.Xb.shape[0]
+    assign = route_queries(state, U)
+    Ub, order, block_of, slot = scatter_by_block(U, assign, M)
+    one = lambda Um, *mf: _block_posterior(kfn, params, state, Um, mf)
+    means, covs = jax.vmap(one)(Ub, *_block_fields(state))
+    mean = gather_by_block(means, order, block_of, slot)
+    slot_q = jnp.zeros_like(slot).at[order].set(slot)   # slot in caller order
+    same = assign[:, None] == assign[None, :]
+    covm = jnp.where(same,
+                     covs[assign[:, None], slot_q[:, None], slot_q[None, :]],
+                     jnp.zeros((), covs.dtype))
+    return GPPosterior(mean, covm)
 
 
 def predict(kfn, params, S, X, y, U, runner: Runner) -> ParallelPosterior:
@@ -202,4 +269,5 @@ def predict_distributed(kfn, params, S, X, y, U,
     return ParallelPosterior(runner.unshard(means), covs)
 
 
-api.register(api.GPMethod("ppic", fit, predict_batch, predict_batch_diag))
+api.register(api.GPMethod("ppic", fit, predict_batch, predict_batch_diag,
+                          predict_routed_diag))

@@ -16,6 +16,14 @@ batch — the real-time path. ``predict`` (legacy one-shot) is a thin wrapper
 over the two; ``predict_distributed`` keeps the fully-collective execution
 where prediction itself must stay on-device.
 
+Unlike pPIC, pPITC needs no routed serving variant: eqs. (7)-(8) touch only
+the global S-space factors, so a query's posterior is already independent of
+which machine evaluates it — ``predict_blocks`` is pure layout. The
+``GPMethod`` therefore registers with ``predict_routed_diag=None``; a
+``GPServer(routed=True)`` rejects it at construction and the plain
+``predict_diag`` path already carries the invariance routing buys (see
+ppic.predict_routed for the block-sensitive case).
+
 Zero prior mean assumed (data pipeline centers y).
 """
 from __future__ import annotations

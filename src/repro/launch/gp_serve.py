@@ -8,37 +8,58 @@ prediction possible. The serving-side realization (core/api.py architecture):
 * incoming query points are queued and padded to a small set of bucket
   sizes, so ONE jitted ``predict_diag(params, state, U)`` call serves the
   whole microbatch with at most ``len(buckets)`` compilations ever;
-* the state is hot-swappable: after ``online.assimilate``/``retire`` the
-  new state pytree has the same treedef/shapes (pPITC: |S|-space only), so
+* flushes trigger on **size** (queue reaches ``max_batch``) or on **age**
+  (oldest pending ticket exceeds ``flush_deadline_ms`` at the next
+  ``pump()``), so p99 latency at low arrival rates is bounded by the
+  deadline instead of by how long the queue takes to fill;
+* flushes dispatch asynchronously: the jitted predict and the per-ticket
+  slices are enqueued on the XLA stream and nothing blocks until a ticket
+  is actually resolved (``result`` calls ``block_until_ready``), so compute
+  overlaps with further submits;
+* with ``routed=True`` (pPIC/PIC states carrying block centroids) the flush
+  groups queue entries by their nearest-centroid target block before
+  padding and serves them through the method's ``predict_routed_diag`` —
+  each ticket's posterior is then invariant to what else arrived in the
+  same microbatch (Remark 2; tests/test_routing_equivalence.py);
+* the state is hot-swappable: after ``online.assimilate``/``retire`` (or a
+  refit) the new state pytree has the same treedef/shapes, so
   ``swap_state`` changes the posterior under live traffic with zero
   recompilation.
 
-Single-process and synchronous by design — the concurrency story is the
-mesh underneath (ShardMapRunner fit) plus XLA async dispatch; what this
-layer owns is amortization (never redo O(b^3) work per query) and batching
-(never launch per-point kernels). benchmarks/bench_serve_latency.py
-quantifies both.
+Single-process by design — the concurrency story is the mesh underneath
+(ShardMapRunner fit) plus XLA async dispatch; what this layer owns is
+amortization (never redo O(b^3) work per query), batching (never launch
+per-point kernels), and latency bounding (never hold a ticket past its
+deadline). benchmarks/bench_serve_latency.py quantifies all three.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import api
 
 
 def default_buckets(max_batch: int, *, min_bucket: int = 8) -> tuple[int, ...]:
-    """Powers of two from min_bucket to max_batch (inclusive)."""
+    """Powers of two from min_bucket up, capped by max_batch (inclusive).
+
+    Deduplicated by construction: a duplicate bucket would compile the same
+    executable twice and skew padding stats, so the ladder is squeezed
+    through ``dict.fromkeys`` regardless of how the loop and the trailing
+    ``max_batch`` append interact (regression-tested exhaustively in
+    tests/test_api_state.py)."""
     sizes = []
     b = min_bucket
     while b < max_batch:
         sizes.append(b)
         b *= 2
     sizes.append(max_batch)
-    return tuple(sizes)
+    return tuple(dict.fromkeys(sizes))
 
 
 @dataclasses.dataclass
@@ -48,6 +69,10 @@ class ServeStats:
     n_padded_rows: int = 0
     n_state_swaps: int = 0
     n_evicted: int = 0
+    # flush-trigger split: what actually drained the queue
+    n_size_flushes: int = 0
+    n_deadline_flushes: int = 0
+    n_manual_flushes: int = 0
 
 
 class GPServer:
@@ -55,58 +80,130 @@ class GPServer:
 
     ``submit`` enqueues query points and returns a ticket; ``flush`` runs one
     jitted predict over the padded queue and resolves every ticket to a
-    (mean, var) pair. ``submit`` auto-flushes when the queue reaches
-    ``max_batch``. ``predict`` is the synchronous path for a caller-held
-    batch (still bucket-padded, still amortized).
+    (mean, var) pair. The queue drains on three triggers:
+
+    * size     — ``submit`` auto-flushes when the queue reaches ``max_batch``;
+    * deadline — when ``flush_deadline_ms`` is set, any ``submit``/``pump``
+      that observes the oldest pending ticket older than the deadline flushes
+      immediately (call ``pump()`` from the serving loop's idle path);
+    * manual   — ``flush()``/``result()`` on a still-queued ticket.
+
+    ``predict`` is the synchronous path for a caller-held batch (still
+    bucket-padded, still amortized). ``clock`` is injectable for tests and
+    simulation (seconds, monotonic).
     """
 
     def __init__(self, model: api.FittedGP, *, max_batch: int = 64,
                  buckets: tuple[int, ...] | None = None,
-                 max_ready: int = 65536):
+                 max_ready: int = 65536,
+                 flush_deadline_ms: float | None = None,
+                 routed: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
         self.model = model
         self.max_batch = max_batch
-        self.buckets = tuple(sorted(buckets or default_buckets(max_batch)))
+        self.buckets = tuple(sorted(set(buckets or default_buckets(max_batch))))
         if self.buckets[-1] < max_batch:
             raise ValueError(f"largest bucket {self.buckets[-1]} < "
                              f"max_batch {max_batch}")
         self.max_ready = max_ready
+        self.flush_deadline_ms = flush_deadline_ms
+        self.routed = routed
+        self._clock = clock
         self.stats = ServeStats()
-        self._queue: list[tuple[int, jax.Array]] = []
+        self._queue: list[tuple[int, jax.Array, float]] = []
         self._ready: dict[int, tuple[jax.Array, jax.Array]] = {}
         self._next_ticket = 0
         method, kfn = model.method, model.kfn
+        if routed and method.predict_routed_diag is None:
+            raise ValueError(
+                f"routed=True but method {method.name!r} has no "
+                f"predict_routed_diag (needs a state with block centroids, "
+                f"e.g. ppic/pic)")
+        diag = method.predict_routed_diag if routed else method.predict_diag
         # params/state are traced arguments: hot-swapping either re-runs the
         # same compiled executable as long as shapes/dtypes are unchanged.
         self._predict_fn: Callable = jax.jit(
-            lambda params, state, U: method.predict_diag(kfn, params,
-                                                         state, U))
+            lambda params, state, U: diag(kfn, params, state, U))
 
     # -- request path -------------------------------------------------------
 
     def submit(self, x: jax.Array) -> int:
-        """Enqueue one query point (d,); returns a ticket for ``result``."""
+        """Enqueue one query point (d,); returns a ticket for ``result``.
+
+        Points are staged host-side (NumPy): microbatch assembly must not
+        touch XLA, otherwise every distinct queue length eagerly compiles a
+        fresh stack/pad kernel and the one-time compiles show up as serving
+        tail latency."""
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._queue.append((ticket, jnp.asarray(x)))
+        self._queue.append((ticket, np.asarray(x), self._clock()))
         self.stats.n_requests += 1
         if len(self._queue) >= self.max_batch:
-            self.flush()
+            self.flush(trigger="size")
+        elif self._deadline_exceeded():
+            self.flush(trigger="deadline")
         return ticket
 
     @property
     def pending(self) -> int:
         return len(self._queue)
 
-    def flush(self) -> None:
-        """Serve the queue with one padded, jitted predict call."""
+    def oldest_age_ms(self) -> float:
+        """Age of the oldest pending ticket (0.0 when the queue is empty)."""
         if not self._queue:
-            return
-        tickets = [t for t, _ in self._queue]
-        U = jnp.stack([x for _, x in self._queue])
+            return 0.0
+        return (self._clock() - self._queue[0][2]) * 1e3
+
+    def _deadline_exceeded(self) -> bool:
+        return (self.flush_deadline_ms is not None and bool(self._queue)
+                and self.oldest_age_ms() >= self.flush_deadline_ms)
+
+    def pump(self) -> int:
+        """Deadline driver: flush if the oldest pending ticket is past
+        ``flush_deadline_ms``. Call from the serving loop whenever idle.
+        Returns the number of tickets resolved (0 if nothing was due)."""
+        if self._deadline_exceeded():
+            return self.flush(trigger="deadline")
+        return 0
+
+    def flush(self, *, trigger: str = "manual") -> int:
+        """Serve the queue with one padded, jitted predict call.
+
+        Dispatch is asynchronous: the predict call and the per-ticket result
+        slices go onto the XLA stream without blocking; the host returns to
+        accepting submits immediately and each ticket materializes at
+        ``result`` time. Returns the number of tickets resolved.
+        """
+        if trigger not in ("size", "deadline", "manual"):
+            # validate before touching the queue: a bad trigger must not
+            # destroy pending tickets after predict but before resolution
+            raise ValueError(f"unknown flush trigger {trigger!r}; "
+                             f"expected 'size', 'deadline', or 'manual'")
+        if not self._queue:
+            return 0
+        queue = self._queue
+        U = np.stack([x for _, x, _ in queue])
+        if self.routed:
+            # group queue entries by their target block before padding so
+            # the device-side scatter sees contiguous per-block runs.
+            # Host-side mirror of ppic.route_queries (same centroids, same
+            # squared-distance argmin); the routed predict re-derives the
+            # assignment on device, so this ordering affects locality only —
+            # per-ticket posteriors are identical either way
+            # (tests/test_routing_equivalence.py, bitwise).
+            cents = np.asarray(self.model.state.centroids)
+            a = ((U[:, None, :] - cents[None, :, :]) ** 2).sum(-1).argmin(1)
+            order = np.argsort(a, kind="stable")
+            queue = [queue[i] for i in order]
+            U = U[order]
+        tickets = [t for t, _, _ in queue]
         # predict before clearing: a failing batch (e.g. one malformed
         # point) must not destroy the other pending tickets
         mean, var = self.predict(U)
         self._queue.clear()
+        field = {"size": "n_size_flushes", "deadline": "n_deadline_flushes",
+                 "manual": "n_manual_flushes"}[trigger]
+        setattr(self.stats, field, getattr(self.stats, field) + 1)
         for i, t in enumerate(tickets):
             self._ready[t] = (mean[i], var[i])
         # bound memory against abandoned tickets: evict oldest results
@@ -115,26 +212,56 @@ class GPServer:
             dropped = next(iter(self._ready))
             del self._ready[dropped]
             self.stats.n_evicted += 1
+        return len(tickets)
+
+    def done(self, ticket: int) -> bool:
+        """True when a ticket's result is ready to collect without flushing.
+
+        'Ready' means the flush was dispatched — the device values may still
+        be in flight; ``result``/``sync`` do the blocking."""
+        return ticket in self._ready
+
+    def sync(self) -> None:
+        """Block until every already-flushed result has materialized.
+
+        A measurement/shutdown barrier (benchmarks use it to charge real
+        flush compute to the clock); normal serving lets ``result`` block
+        per ticket instead."""
+        jax.block_until_ready(list(self._ready.values()))
 
     def result(self, ticket: int) -> tuple[jax.Array, jax.Array]:
-        """(mean, var) for a ticket; flushes if it is still queued."""
+        """(mean, var) for a ticket; flushes if it is still queued.
+
+        This is the only point the serving layer blocks on the device —
+        everything upstream (flushes, slices) was dispatched asynchronously.
+        """
         if ticket not in self._ready:
             self.flush()
         try:
-            return self._ready.pop(ticket)
+            out = self._ready.pop(ticket)
         except KeyError:
             raise KeyError(f"ticket {ticket}: unknown, already collected, "
                            f"or evicted (max_ready={self.max_ready})") \
                 from None
+        return jax.block_until_ready(out)
 
     # -- batch path ---------------------------------------------------------
 
     def predict(self, U: jax.Array) -> tuple[jax.Array, jax.Array]:
-        """Bucket-padded (mean, var) over a (u, d) batch of queries."""
+        """Bucket-padded (mean, var) over a (u, d) batch of queries.
+
+        Padding happens host-side: a NumPy fill costs nothing, while an
+        eager ``jnp.pad`` would compile once per distinct pad width and leak
+        compile time into the serving path. The jitted predict (one
+        executable per bucket) is the only device dispatch.
+        """
         u = U.shape[0]
         bucket = self._bucket_for(u)
         if bucket > u:
-            U = jnp.pad(U, [(0, bucket - u)] + [(0, 0)] * (U.ndim - 1))
+            Un = np.asarray(U)
+            buf = np.zeros((bucket,) + Un.shape[1:], dtype=Un.dtype)
+            buf[:u] = Un
+            U = buf
             self.stats.n_padded_rows += bucket - u
         mean, var = self._predict_fn(self.model.params, self.model.state, U)
         self.stats.n_batches += 1
@@ -157,5 +284,11 @@ class GPServer:
         changed structure (e.g. pPIC after assimilate grew the block axis)
         triggers exactly one recompile on the next call.
         """
+        if self.routed and not hasattr(state, "centroids"):
+            # fail at swap time, not mid-flush under live traffic
+            raise ValueError(
+                f"routed server requires a state with block centroids; got "
+                f"{type(state).__name__} (online.to_state emits PITCState — "
+                f"refit the PIC-family state, or serve unrouted)")
         self.model = self.model.with_state(state)
         self.stats.n_state_swaps += 1

@@ -142,6 +142,41 @@ def pad_blocks(X: jax.Array, M: int) -> tuple[jax.Array, int]:
     return X.reshape((M, b) + X.shape[1:]), n
 
 
+def scatter_by_block(X: jax.Array, assign: jax.Array, M: int):
+    """Scatter (n, ...) rows into an (M, n, ...) block layout by assignment.
+
+    The routed-serving counterpart of ``pad_blocks``: instead of slicing the
+    batch positionally, row i lands in block ``assign[i]`` at the next free
+    slot (original order preserved within a block — stable sort). Capacity is
+    ``n`` per block, so the output shape depends only on (n, M): any
+    composition of the same-sized batch compiles to the same executable, and
+    a fully-skewed batch (all rows on one block) still fits. Unoccupied slots
+    stay zero; per-row independence of the predictive equations makes them
+    inert (see ``pad_blocks``).
+
+    Returns ``(Xb, order, block_of, slot)`` where ``Xb[block_of[j], slot[j]]
+    == X[order[j]]``; pass the triple to ``gather_by_block`` to restore
+    caller order.
+    """
+    n = X.shape[0]
+    order = jnp.argsort(assign, stable=True)               # group by block
+    block_of = assign[order]                               # (n,) sorted ids
+    starts = jnp.searchsorted(block_of, jnp.arange(M))     # first row of m
+    slot = jnp.arange(n) - starts[block_of]                # intra-block slot
+    Xb = jnp.zeros((M, n) + X.shape[1:], X.dtype)
+    Xb = Xb.at[block_of, slot].set(X[order])
+    return Xb, order, block_of, slot
+
+
+def gather_by_block(vals: jax.Array, order: jax.Array, block_of: jax.Array,
+                    slot: jax.Array) -> jax.Array:
+    """Invert ``scatter_by_block`` on per-row outputs: (M, n, ...) -> (n, ...)
+    in the original caller order."""
+    picked = vals[block_of, slot]                          # sorted order
+    out = jnp.zeros_like(picked)
+    return out.at[order].set(picked)
+
+
 def make_runner(mode: str, *, M: int | None = None, mesh: Mesh | None = None,
                 axis_name="machines") -> Runner:
     if mode == "vmap":

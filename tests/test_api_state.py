@@ -203,6 +203,17 @@ class TestGPServer:
         assert default_buckets(64) == (8, 16, 32, 64)
         assert default_buckets(8) == (8,)
 
+    def test_default_buckets_never_duplicate(self):
+        """Regression: max_batch already a power of two >= min_bucket must
+        not emit a duplicate trailing bucket, for any (max_batch, min_bucket)
+        combination; ladders stay sorted and end at max_batch."""
+        for min_bucket in (1, 2, 4, 8, 16):
+            for max_batch in range(1, 257):
+                bs = default_buckets(max_batch, min_bucket=min_bucket)
+                assert len(set(bs)) == len(bs), (max_batch, min_bucket, bs)
+                assert list(bs) == sorted(bs)
+                assert bs[-1] == max_batch
+
     def test_oversized_batch(self, prob, runner):
         model = api.fit("ppitc", prob["kfn"], prob["params"], prob["X"],
                         prob["y"], S=prob["S"], runner=runner)

@@ -5,6 +5,8 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 SCRIPT = r"""
 import jax, jax.numpy as jnp
 assert len(jax.devices()) == 8
@@ -48,6 +50,7 @@ print("LAUNCH_OK")
 """
 
 
+@pytest.mark.slow
 def test_sharded_train_and_serve_on_mesh():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -58,6 +61,7 @@ def test_sharded_train_and_serve_on_mesh():
     assert "LAUNCH_OK" in r.stdout
 
 
+@pytest.mark.slow
 def test_eager_train_step_all_families():
     """One eager train step per family on one device (fast coverage of the
     builder across attention/MoE/SSM/enc-dec paths)."""

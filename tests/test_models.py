@@ -13,6 +13,7 @@ from repro.models import layers, transformer as tf
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ARCH_NAMES)
 class TestArchSmoke:
     def test_forward_and_grad(self, name):
@@ -54,6 +55,7 @@ class TestArchSmoke:
         assert float(l1) < float(l0) + 1e-4
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["qwen3-1.7b", "mamba2-130m",
                                   "jamba-1.5-large-398b", "gemma3-4b",
                                   "whisper-medium", "mixtral-8x22b"])

@@ -94,6 +94,58 @@ class TestClustering:
         np.testing.assert_allclose(clustering.uncluster(yc, pd_),
                                    np.asarray(p["y"]))
 
+    def test_capacity_assign_single_machine(self):
+        """M=1 degenerates to 'everything on machine 0'."""
+        rs = np.random.RandomState(0)
+        X = rs.randn(7, 3)
+        assign = clustering.capacity_assign(X, X[:1], 7)
+        assert (assign == 0).all()
+
+    def test_capacity_assign_indivisible_n(self):
+        """n not divisible by M: capacity = ceil(n/M) absorbs the slack
+        while every block stays within capacity and every point lands."""
+        rs = np.random.RandomState(1)
+        n, M = 13, 4
+        X = rs.randn(n, 2)
+        cap = -(-n // M)
+        assign = clustering.capacity_assign(X, X[:M], cap)
+        assert (assign >= 0).all() and (assign < M).all()
+        counts = np.bincount(assign, minlength=M)
+        assert counts.sum() == n and counts.max() <= cap
+
+    def test_capacity_assign_duplicates_spill_over(self):
+        """All points identical -> all prefer one centroid; the greedy fill
+        must spill to other machines instead of overfilling."""
+        X = np.ones((12, 2))
+        centers = np.stack([np.zeros(2), np.ones(2), 5 * np.ones(2)])
+        assign = clustering.capacity_assign(X, centers, 4)
+        counts = np.bincount(assign, minlength=3)
+        assert counts.max() <= 4 and counts.sum() == 12
+        assert (assign >= 0).all()
+
+    def test_capacity_assign_overflow_rejected(self):
+        X = np.zeros((5, 2))
+        with np.testing.assert_raises(AssertionError):
+            clustering.capacity_assign(X, X[:2], 2)   # 2*2 < 5
+
+    def test_capacity_assign_permutation_roundtrips(self):
+        """argsort(assign) is the block permutation; uncluster inverts it on
+        per-point outputs, including when n doesn't divide M."""
+        rs = np.random.RandomState(3)
+        for n, M in ((12, 4), (13, 4), (7, 1), (9, 2)):
+            X = rs.randn(n, 3)
+            cap = -(-n // M)
+            assign = clustering.capacity_assign(X, X[:M], cap)
+            perm = np.argsort(assign, kind="stable")
+            values = rs.randn(n)
+            np.testing.assert_array_equal(
+                clustering.uncluster(values[perm], perm), values)
+
+    def test_block_centroids(self):
+        Xb = jnp.asarray(np.arange(24, dtype=np.float64).reshape(2, 4, 3))
+        c = clustering.block_centroids(Xb)
+        np.testing.assert_allclose(c, np.asarray(Xb).mean(axis=1))
+
     def test_clustering_improves_ppic_over_random(self):
         """Co-clustered pPIC should not be worse than block-random pPIC on a
         spatially structured problem (Remark 2 rationale)."""

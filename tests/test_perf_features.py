@@ -46,6 +46,7 @@ class TestGatherDispatch:
         assert float(jnp.abs(g["w_in"]).max()) > 0
 
 
+@pytest.mark.slow
 class TestRingCache:
     def test_ring_matches_full_cache(self):
         cfg = smoke_config("gemma3-4b")

@@ -1,0 +1,165 @@
+"""Property-based equivalence suite for centroid-routed pPIC serving.
+
+The served posterior must be a pure function of (query point, fitted state):
+Remark 2 says a query belongs to the block whose local data best explains
+it, not to whichever block its *position in the arriving batch* happens to
+map to. The properties locked down here:
+
+* permutation invariance — bitwise: reordering a query batch permutes the
+  outputs and changes nothing else (same shapes -> same executable -> same
+  floating-point program per row);
+* re-chunking invariance — serving the same query set in chunks of any size
+  (different shapes, hence different padded executables) agrees to float64
+  roundoff;
+* centralized equivalence — routed pPIC from cached factors equals the
+  literal centralized PIC oracle (eqs. 15-18) with eq. (18)'s i = m branch
+  selected by the same nearest-centroid assignment;
+* the positional path is *not* composition-invariant (the motivating bug);
+* the routed GPServer resolves every ticket to the routed posterior no
+  matter the arrival order.
+
+Runs under real hypothesis when installed, else the seeded shim
+(tests/helpers.py) replays each property as deterministic random draws.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import api, pitc, ppic
+from repro.launch.gp_serve import GPServer
+from repro.parallel.runner import VmapRunner
+
+from helpers import make_problem
+
+ORACLE_TOL = 5e-6       # matches tests/test_equivalence.py (PSD-solve jitter)
+RECHUNK_TOL = 1e-10     # float64 roundoff across differently-padded shapes
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_problem()
+
+
+@pytest.fixture(scope="module")
+def state(prob):
+    return ppic.fit(prob["kfn"], prob["params"], prob["X"], prob["y"],
+                    S=prob["S"], runner=VmapRunner(M=prob["M"]))
+
+
+@pytest.fixture(scope="module")
+def base(prob, state):
+    """Reference routed posterior of the full query set, served whole."""
+    return ppic.predict_routed_diag(prob["kfn"], prob["params"], state,
+                                    prob["U"])
+
+
+class TestRoutingInvariance:
+    @settings(max_examples=10)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_permutation_is_bitwise_invariant(self, prob, state, base, seed):
+        perm = np.random.RandomState(seed).permutation(prob["U"].shape[0])
+        m, v = ppic.predict_routed_diag(prob["kfn"], prob["params"], state,
+                                        prob["U"][perm])
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(base[0])[perm])
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(base[1])[perm])
+
+    @settings(max_examples=10)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           chunk=st.integers(min_value=1, max_value=11))
+    def test_rechunking_is_invariant(self, prob, state, base, seed, chunk):
+        """Permute AND re-chunk: serving the set in arbitrary microbatches
+        reproduces the whole-batch posterior (shapes differ, so only
+        roundoff-level agreement is guaranteed)."""
+        u = prob["U"].shape[0]
+        perm = np.random.RandomState(seed).permutation(u)
+        Up = prob["U"][perm]
+        parts = [ppic.predict_routed_diag(prob["kfn"], prob["params"], state,
+                                          Up[i:i + chunk])
+                 for i in range(0, u, chunk)]
+        m = jnp.concatenate([p[0] for p in parts])
+        v = jnp.concatenate([p[1] for p in parts])
+        np.testing.assert_allclose(m, np.asarray(base[0])[perm],
+                                   atol=RECHUNK_TOL)
+        np.testing.assert_allclose(v, np.asarray(base[1])[perm],
+                                   atol=RECHUNK_TOL)
+
+    def test_routing_is_pure_in_the_query(self, prob, state):
+        """Assignment of a query never depends on its neighbours."""
+        whole = np.asarray(ppic.route_queries(state, prob["U"]))
+        for i in range(prob["U"].shape[0]):
+            one = np.asarray(ppic.route_queries(state, prob["U"][i:i + 1]))
+            assert one[0] == whole[i]
+
+    def test_positional_path_is_composition_dependent(self, prob, state):
+        """The motivating defect: predict_batch_diag's per-query posterior
+        moves when the batch is permuted (queries land on other blocks)."""
+        m, _ = ppic.predict_batch_diag(prob["kfn"], prob["params"], state,
+                                       prob["U"])
+        perm = np.random.RandomState(0).permutation(prob["U"].shape[0])
+        mp, _ = ppic.predict_batch_diag(prob["kfn"], prob["params"], state,
+                                        prob["U"][perm])
+        assert float(jnp.abs(mp - jnp.asarray(np.asarray(m)[perm])).max()) \
+            > 1e-6
+
+
+class TestRoutedEqualsCentralizedPIC:
+    def test_matches_routed_literal_oracle(self, prob, state, base):
+        """Thm 2 + Remark 2: cached-factor routed pPIC == literal centralized
+        PIC with the same per-query block choice in eq. (18)."""
+        assign = ppic.route_queries(state, prob["U"])
+        oracle = pitc.pic_predict_literal_routed(
+            prob["kfn"], prob["params"], prob["S"], prob["X"], prob["y"],
+            prob["U"], prob["M"], assign)
+        np.testing.assert_allclose(base[0], oracle.mean, atol=ORACLE_TOL)
+        np.testing.assert_allclose(base[1], jnp.diag(oracle.cov),
+                                   atol=ORACLE_TOL)
+
+    def test_full_cov_view_agrees_with_diag(self, prob, state, base):
+        post = ppic.predict_routed(prob["kfn"], prob["params"], state,
+                                   prob["U"])
+        np.testing.assert_allclose(post.mean, base[0], atol=1e-12)
+        np.testing.assert_allclose(jnp.diag(post.cov), base[1], atol=1e-10)
+
+    def test_within_block_cov_matches_oracle(self, prob, state):
+        """Same-block off-diagonal entries come from eqs. (12)-(14) too."""
+        assign = np.asarray(ppic.route_queries(state, prob["U"]))
+        post = ppic.predict_routed(prob["kfn"], prob["params"], state,
+                                   prob["U"])
+        oracle = pitc.pic_predict_literal_routed(
+            prob["kfn"], prob["params"], prob["S"], prob["X"], prob["y"],
+            prob["U"], prob["M"], assign)
+        same = assign[:, None] == assign[None, :]
+        diff = np.abs(np.asarray(post.cov) - np.asarray(oracle.cov))
+        assert float(diff[same].max()) < ORACLE_TOL
+
+
+class TestRegistryAndServer:
+    def test_registry_exposes_routed_for_pic_family(self, prob):
+        assert api.get("ppic").predict_routed_diag is not None
+        assert api.get("pic").predict_routed_diag is not None
+        assert api.get("ppitc").predict_routed_diag is None
+
+    def test_fitted_gp_routed_guard(self, prob):
+        runner = VmapRunner(M=prob["M"])
+        model = api.fit("ppitc", prob["kfn"], prob["params"], prob["X"],
+                        prob["y"], S=prob["S"], runner=runner)
+        with pytest.raises(ValueError, match="no routed prediction"):
+            model.predict_routed_diag(prob["U"])
+
+    @settings(max_examples=5)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_server_resolves_tickets_order_independently(self, prob, state,
+                                                         seed):
+        """Routed GPServer: any arrival order yields the same per-ticket
+        posterior as the direct routed call on the whole set."""
+        model = api.FittedGP(api.get("ppic"), prob["kfn"], prob["params"],
+                             state)
+        srv = GPServer(model, max_batch=8, routed=True)
+        perm = np.random.RandomState(seed).permutation(8)
+        tickets = {int(i): srv.submit(prob["U"][int(i)]) for i in perm}
+        ref_m, ref_v = model.predict_routed_diag(prob["U"][:8])
+        for i in range(8):
+            m, v = srv.result(tickets[i])
+            np.testing.assert_array_equal(np.asarray(m), np.asarray(ref_m[i]))
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(ref_v[i]))

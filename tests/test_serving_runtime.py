@@ -1,6 +1,9 @@
-"""Continuous-batching scheduler + runtime monitoring."""
+"""Continuous-batching scheduler, runtime monitoring, and the GP serving
+runtime (deadline-driven flusher + routed hot-swap)."""
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.configs.registry import smoke_config
 from repro.launch.scheduler import ContinuousBatcher, Request
@@ -128,3 +131,191 @@ def test_gp_experiment_grid():
     assert g.rank_multiplier == 2 and g.data_sizes[-1] == 32000
     s = scaled_grid("aimpeak")
     assert s.fixed_data == 4000 and s.params[0] == 32
+
+
+# ---------------------------------------------------------------------------
+# GP serving runtime: deadline-driven flusher + routed hot-swap
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gp_prob():
+    from helpers import make_problem
+    return make_problem()
+
+
+@pytest.fixture(scope="module")
+def gp_model(gp_prob):
+    from repro.core import api
+    from repro.parallel.runner import VmapRunner
+    p = gp_prob
+    return api.fit("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                   S=p["S"], runner=VmapRunner(M=p["M"]))
+
+
+class TestDeadlineFlusher:
+    def _server(self, model, **kw):
+        from repro.launch.gp_serve import GPServer
+        t = [0.0]
+        srv = GPServer(model, clock=lambda: t[0], **kw)
+        return srv, t
+
+    def test_old_ticket_resolves_on_pump(self, gp_prob, gp_model):
+        """A ticket past flush_deadline_ms drains on the next pump() even
+        though the queue never reached max_batch."""
+        srv, t = self._server(gp_model, max_batch=8, flush_deadline_ms=50)
+        ticket = srv.submit(gp_prob["U"][0])
+        assert srv.pending == 1
+        assert srv.pump() == 0 and srv.pending == 1     # 0ms old: not due
+        t[0] += 0.049
+        assert srv.pump() == 0 and srv.pending == 1     # 49ms: still not due
+        t[0] += 0.002
+        assert srv.pump() == 1 and srv.pending == 0     # 51ms: flushed
+        assert srv.done(ticket)
+        assert srv.stats.n_deadline_flushes == 1
+        assert srv.stats.n_size_flushes == 0
+        m, v = srv.result(ticket)
+        ref_m, ref_v = gp_model.predict_diag(gp_prob["U"][:1])
+        np.testing.assert_allclose(m, ref_m[0], atol=1e-12)
+        np.testing.assert_allclose(v, ref_v[0], atol=1e-12)
+
+    def test_submit_observes_deadline(self, gp_prob, gp_model):
+        """An overdue queue drains on the next submit too, not only pump()."""
+        srv, t = self._server(gp_model, max_batch=8, flush_deadline_ms=10)
+        srv.submit(gp_prob["U"][0])
+        t[0] += 0.02
+        srv.submit(gp_prob["U"][1])                     # observes the age
+        assert srv.pending == 0
+        assert srv.stats.n_deadline_flushes == 1
+
+    def test_no_deadline_means_size_only(self, gp_prob, gp_model):
+        srv, t = self._server(gp_model, max_batch=4)
+        srv.submit(gp_prob["U"][0])
+        t[0] += 1e6                                      # ancient ticket
+        assert srv.pump() == 0 and srv.pending == 1      # no deadline set
+        for i in range(1, 4):
+            srv.submit(gp_prob["U"][i])
+        assert srv.pending == 0
+        assert srv.stats.n_size_flushes == 1
+        assert srv.stats.n_deadline_flushes == 0
+
+    def test_trigger_split_stats(self, gp_prob, gp_model):
+        srv, t = self._server(gp_model, max_batch=2, flush_deadline_ms=100)
+        srv.submit(gp_prob["U"][0]); srv.submit(gp_prob["U"][1])  # size
+        srv.submit(gp_prob["U"][2])
+        t[0] += 0.2
+        srv.pump()                                                # deadline
+        srv.submit(gp_prob["U"][3])
+        srv.flush()                                               # manual
+        s = srv.stats
+        assert (s.n_size_flushes, s.n_deadline_flushes,
+                s.n_manual_flushes) == (1, 1, 1)
+        assert s.n_batches == 3
+
+    def test_oldest_age_tracks_head_of_queue(self, gp_prob, gp_model):
+        srv, t = self._server(gp_model, max_batch=8, flush_deadline_ms=1e9)
+        assert srv.oldest_age_ms() == 0.0
+        srv.submit(gp_prob["U"][0])
+        t[0] += 0.25
+        srv.submit(gp_prob["U"][1])
+        assert abs(srv.oldest_age_ms() - 250.0) < 1e-6
+
+    def test_bad_trigger_rejected_before_queue_is_touched(self, gp_prob,
+                                                          gp_model):
+        srv, t = self._server(gp_model, max_batch=8)
+        ticket = srv.submit(gp_prob["U"][0])
+        with pytest.raises(ValueError, match="unknown flush trigger"):
+            srv.flush(trigger="timeout")
+        assert srv.pending == 1          # queue intact after the bad call
+        srv.flush()
+        assert srv.done(ticket)
+
+    def test_async_resolution_blocks_only_at_result(self, gp_prob, gp_model):
+        """flush() leaves device values unforced; result() materializes."""
+        srv, t = self._server(gp_model, max_batch=8, flush_deadline_ms=1)
+        ticket = srv.submit(gp_prob["U"][0])
+        t[0] += 1.0
+        srv.pump()
+        m, v = srv.result(ticket)
+        assert np.isfinite(float(m)) and float(v) > 0
+
+
+class TestRoutedServing:
+    def test_routed_requires_centroid_state(self, gp_model):
+        from repro.launch.gp_serve import GPServer
+        with pytest.raises(ValueError, match="predict_routed_diag"):
+            GPServer(gp_model, routed=True)              # ppitc: no routing
+
+    def test_routed_swap_rejects_centroidless_state(self, gp_prob, gp_model):
+        """A routed server must reject online.to_state's PITCState at swap
+        time — not AttributeError mid-flush under live traffic."""
+        from repro.core import api, online, ppic
+        from repro.launch.gp_serve import GPServer
+        from repro.parallel.runner import VmapRunner
+        p = gp_prob
+        runner = VmapRunner(M=p["M"])
+        st = ppic.fit(p["kfn"], p["params"], p["X"], p["y"], S=p["S"],
+                      runner=runner)
+        srv = GPServer(api.FittedGP(api.get("ppic"), p["kfn"], p["params"],
+                                    st), max_batch=8, routed=True)
+        store = online.build(p["kfn"], p["params"], p["S"], p["X"], p["y"],
+                             runner)
+        with pytest.raises(ValueError, match="centroids"):
+            srv.swap_state(online.to_state(store, p["S"]))
+        # queue survives the rejected swap; serving continues on the old state
+        ticket = srv.submit(p["U"][0])
+        srv.flush()
+        assert srv.done(ticket)
+
+    def test_hot_swap_routed_keeps_treedef_and_shapes(self, gp_prob):
+        """Refit-and-swap under routed traffic reuses the executable: the
+        new PICState has the identical treedef and leaf shapes."""
+        from repro.core import api, ppic
+        from repro.launch.gp_serve import GPServer
+        from repro.parallel.runner import VmapRunner
+        p = gp_prob
+        runner = VmapRunner(M=p["M"])
+        st1 = ppic.fit(p["kfn"], p["params"], p["X"], p["y"], S=p["S"],
+                       runner=runner)
+        model = api.FittedGP(api.get("ppic"), p["kfn"], p["params"], st1)
+        srv = GPServer(model, max_batch=8, flush_deadline_ms=5, routed=True)
+        m1, _ = srv.predict(p["U"][:8])
+
+        st2 = ppic.fit(p["kfn"], p["params"], p["X"], 2.0 * p["y"],
+                       S=p["S"], runner=runner)
+        assert jax.tree.structure(st1) == jax.tree.structure(st2)
+        assert [a.shape for a in jax.tree.leaves(st1)] == \
+            [a.shape for a in jax.tree.leaves(st2)]
+        srv.swap_state(st2)
+        m2, v2 = srv.predict(p["U"][:8])
+
+        ref_m, ref_v = ppic.predict_routed_diag(p["kfn"], p["params"], st2,
+                                                p["U"][:8])
+        np.testing.assert_allclose(m2, ref_m, atol=1e-12)
+        np.testing.assert_allclose(v2, ref_v, atol=1e-12)
+        assert float(jnp.abs(m2 - m1).max()) > 1e-6
+        assert srv.stats.n_state_swaps == 1
+
+    def test_routed_tickets_under_mixed_triggers(self, gp_prob):
+        """Deadline + size triggers interleaved on routed traffic still
+        resolve every ticket to its composition-invariant posterior."""
+        from repro.core import api
+        from repro.launch.gp_serve import GPServer
+        from repro.parallel.runner import VmapRunner
+        p = gp_prob
+        model = api.fit("ppic", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=VmapRunner(M=p["M"]))
+        t = [0.0]
+        srv = GPServer(model, max_batch=4, flush_deadline_ms=50,
+                       routed=True, clock=lambda: t[0])
+        tickets = {}
+        for i in range(6):                   # 4 -> size flush, 2 left over
+            tickets[i] = srv.submit(p["U"][i])
+            t[0] += 0.001
+        assert srv.stats.n_size_flushes == 1 and srv.pending == 2
+        t[0] += 0.06
+        assert srv.pump() == 2               # deadline drains the remainder
+        ref_m, ref_v = model.predict_routed_diag(p["U"][:6])
+        for i in range(6):
+            m, v = srv.result(tickets[i])
+            np.testing.assert_allclose(m, ref_m[i], atol=1e-10)
+            np.testing.assert_allclose(v, ref_v[i], atol=1e-10)

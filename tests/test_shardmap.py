@@ -9,6 +9,10 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess spawn + 8-device XLA compile
+
 SCRIPT = r"""
 import jax, jax.numpy as jnp
 jax.config.update("jax_enable_x64", True)
