@@ -1,12 +1,16 @@
 """Beyond-paper: fault-tolerance / straggler benchmarks enabled by the
 summary algebra (Sec. 5.2 + DESIGN.md §5): accuracy vs straggler deadline,
-failure-recovery cost vs full recompute, online assimilation cost."""
+failure-recovery cost vs full recompute, online assimilation cost, and the
+incremental (rank-b cholupdate) ``to_state`` vs a cold refit — all through
+the ``api.StateStore`` protocol serving uses."""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import covariance as cov, online, support
+from repro.core import api, covariance as cov, support
 from repro.data import synthetic
 from repro.parallel.runner import VmapRunner
 from repro.runtime import straggler
@@ -26,28 +30,38 @@ def run(quick: bool = False):
     S = support.select_support(kfn, params, ds.X[:512], S_SIZE)
     runner = VmapRunner(M=M)
 
-    t_build = common.timeit(lambda: jax.tree.leaves(online.build(
-        kfn, params, S, ds.X, ds.y, runner))[0])
-    store = online.build(kfn, params, S, ds.X, ds.y, runner)
+    build = lambda: api.init_store("ppitc", kfn, params, ds.X, ds.y, S=S,
+                                   runner=runner)
+    t_build = common.timeit(
+        lambda: jax.tree.leaves(build().store)[0])
+    store = build()
 
     # straggler deadline sweep
-    rows = straggler.simulate(key, store, kfn, params, S, ds.X_test,
-                              ds.y_test, deadlines=(1.2, 2.0, 5.0, 50.0))
+    rows = straggler.simulate(key, store, ds.X_test, ds.y_test,
+                              deadlines=(1.2, 2.0, 5.0, 50.0))
     for r in rows:
         common.emit(f"fault/straggler/deadline{r['deadline']}", t_build,
                     f"fraction={r['fraction']:.2f};rmse={r['rmse']:.4f}")
 
-    # failure recovery: re-aggregation vs full rebuild
+    # failure recovery: rank-b downdate + O(s^2) to_state vs full rebuild
     t_recover = common.timeit(lambda: jax.tree.leaves(
-        online.global_summary(online.retire(store, 3)))[0])
+        store.retire(3).to_state())[0])
     common.emit("fault/recover_degraded", t_recover,
                 f"full_rebuild_us={t_build:.0f};"
                 f"speedup_vs_rebuild={t_build / max(t_recover, 1e-9):.1f}")
 
-    # online assimilation of one new block vs rebuild
-    X2 = ds.X[: n // M]
-    y2 = ds.y[: n // M]
-    t_assim = common.timeit(lambda: jax.tree.leaves(online.assimilate(
-        store, kfn, params, S, X2, y2, VmapRunner(M=1)))[0])
-    common.emit("fault/online_assimilate_block", t_assim,
-                f"full_rebuild_us={t_build:.0f}")
+    # online assimilation + incremental to_state vs rebuild, over wave size:
+    # the rank-b cholupdate path is O(|S|^2 b), so the win over the O(|S|^3
+    # + n b^2) rebuild grows as b shrinks below |S| (b == |S| is the
+    # flop-parity point — same O(|S|^3), sweep-sequential constants)
+    st1 = dataclasses.replace(store, runner=VmapRunner(M=1))
+    for b in sorted({8, 32, n // M}):
+        X2, y2 = ds.X[:b], ds.y[:b]
+        t_assim = common.timeit(lambda: jax.tree.leaves(
+            st1.assimilate(X2, y2).to_state())[0])
+        common.emit(f"fault/online_assimilate_b{b}", t_assim,
+                    f"full_rebuild_us={t_build:.0f};"
+                    f"speedup_vs_rebuild={t_build / max(t_assim, 1e-9):.1f}")
+        if b == 8:
+            common.metric("assimilate_b8_speedup_vs_rebuild",
+                          t_build / max(t_assim, 1e-9))

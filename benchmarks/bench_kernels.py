@@ -35,6 +35,44 @@ def run(quick: bool = False):
                     f"block={bq}x{bk};tile_bytes={tile_bytes};"
                     f"ai_flops_per_byte={flops / tile_bytes:.1f}")
 
+    # --- serve hot-path cross-covariances: se vs se_pallas -----------------
+    # predict_batch_diag is dominated by K_US (|U| x |S|) and K_UD (|U| x b)
+    # assembly; this is the groundwork for routing the serve path's kfn
+    # through the fused Pallas kernel on real accelerators. On CPU the
+    # Pallas body executes in interpret mode (Python), so its wall time is
+    # NOT comparable — the derived column carries the structural tile
+    # metrics that matter on the TPU target, and correctness is asserted.
+    from repro.core import covariance as cov
+    u, s_size, b, d_serve = 64, 128, 512, 8
+    params = cov.init_params(d_serve, signal=1.0, noise=0.3, lengthscale=1.2)
+    se = cov.make_kernel("se")
+    ks = jax.random.split(key, 3)
+    U = jax.random.normal(ks[0], (u, d_serve), jnp.float32)
+    for tag, m, Xother in (("UxS", s_size,
+                            jax.random.normal(ks[1], (s_size, d_serve),
+                                              jnp.float32)),
+                           ("Uxb", b,
+                            jax.random.normal(ks[2], (b, d_serve),
+                                              jnp.float32))):
+        t_jnp = common.timeit(jax.jit(lambda X=Xother: se(params, U, X)))
+        Us, Xs = cov._scale(params, U), cov._scale(params, Xother)
+        sig2 = cov.signal_var(params)
+        K_ref = se(params, U, Xother)
+        K_pal = rbf_ops.rbf_covariance(Us, Xs, sig2,
+                                       impl="pallas_interpret")
+        assert jnp.allclose(K_pal, K_ref, rtol=1e-5, atol=1e-5), \
+            float(jnp.abs(K_pal - K_ref).max())
+        t_pal = common.timeit(lambda: rbf_ops.rbf_covariance(
+            Us, Xs, sig2, impl="pallas_interpret"))
+        d_pad = ((d_serve + 127) // 128) * 128
+        bq, bk = pick_blocks(u, m, d_pad)
+        tile_bytes = (bq + bk) * d_pad * 4 + bq * bk * 4
+        flops = 2 * bq * bk * d_pad + 6 * bq * bk
+        common.emit(f"kernel/xcov_{tag}/u{u}", t_jnp,
+                    f"pallas_interpret_us={t_pal:.0f};block={bq}x{bk};"
+                    f"tile_bytes={tile_bytes};"
+                    f"ai_flops_per_byte={flops / tile_bytes:.1f}")
+
     B, H, T, D = 1, 8, 1024, 128
     q = jax.random.normal(key, (B, H, T, D), jnp.float32)
     k = jax.random.normal(key, (B, H, T, D), jnp.float32)

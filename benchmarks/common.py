@@ -9,7 +9,9 @@ clearly labeled. RMSE/MNLP are exact (hardware-independent).
 """
 from __future__ import annotations
 
+import json
 import math
+import platform
 import time
 
 import jax
@@ -18,6 +20,9 @@ import jax.numpy as jnp
 from repro.roofline import hw
 
 ROWS: list[tuple] = []
+# headline scalars (amortized speedup, serve latency percentiles, ...) keyed
+# by name — what the --json trajectory file tracks across PRs
+METRICS: dict[str, float] = {}
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
@@ -58,3 +63,30 @@ def modeled_parallel_us(total_us: float, M: int, summary_bytes: float) -> float:
 def emit(name: str, us: float, derived: str = "") -> None:
     ROWS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}")
+
+
+def metric(name: str, value: float) -> None:
+    """Record a headline scalar for the machine-readable trajectory file."""
+    METRICS[name] = float(value)
+
+
+def write_json(path: str, *, argv: list[str] | None = None) -> None:
+    """Dump everything this run emitted as versioned JSON (benchmarks/run.py
+    --json): per-call CSV rows verbatim plus the headline METRICS, with
+    enough environment context to compare runs across PRs honestly."""
+    doc = {
+        "schema": 1,
+        "argv": argv or [],
+        "env": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+        },
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in ROWS],
+        "metrics": dict(METRICS),
+    }
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")

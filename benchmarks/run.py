@@ -25,6 +25,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter: fig1|fig2|fig3|table1|fault|"
                          "kernel|serve|lm")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results (rows + headline "
+                         "metrics such as amortized speedup and p50/p99 "
+                         "serve latency) to PATH, e.g. BENCH_serve.json — "
+                         "the cross-PR perf trajectory file")
     args = ap.parse_args()
     quick = args.quick or args.smoke
 
@@ -66,6 +71,13 @@ def main() -> None:
         except Exception as e:  # keep the harness going, report at exit
             failures.append((name, repr(e)))
             print(f"{name}/ERROR,0,{e!r}")
+    if args.json:
+        # written even on failure: a partial trajectory beats none, and the
+        # exit code still flags the run
+        from benchmarks import common
+        common.write_json(args.json, argv=sys.argv[1:])
+        print(f"wrote {args.json} ({len(common.ROWS)} rows, "
+              f"{len(common.METRICS)} metrics)")
     if failures:
         sys.exit(1)
 

@@ -1,19 +1,20 @@
 """AIMPEAK-like traffic prediction with streaming/online updates (Sec. 5.2)
 served in real time through the microbatching GP server.
 
-Morning-peak traffic arrives in 5-minute waves; the summary store assimilates
-each wave with ONE |S|x|S| add — no recompute of earlier waves' O(b^3) work —
-and the serving layer hot-swaps the cached PosteriorState under live traffic
-(launch/gp_serve.py): the jitted predict executable is reused across swaps.
-Straggler deadlines keep predictions real-time (the paper's motivating use
-case).
+Morning-peak traffic arrives in 5-minute waves; the server's attached
+``StateStore`` (api.init_store) assimilates each wave with rank-b Cholesky
+updates of the cached |S|-space factor — no recompute of earlier waves'
+O(b^3) work and no |S|^3 refactorization — and ``GPServer.update`` hot-swaps
+the cached PosteriorState under live traffic: the jitted predict executable
+is reused across swaps. Straggler deadlines keep predictions real-time (the
+paper's motivating use case).
 
     PYTHONPATH=src python examples/aimpeak_traffic.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import api, covariance as cov, online, support
+from repro.core import api, covariance as cov, support
 from repro.data import synthetic
 from repro.launch.gp_serve import GPServer
 from repro.parallel.runner import VmapRunner
@@ -32,33 +33,32 @@ def main():
 
     S = support.select_support(kfn, params, ds.X[:1024], 128)
 
-    # wave 0 bootstraps the store; the server holds the cached state
-    store = online.build(kfn, params, S, ds.X[:wave_n], ds.y[:wave_n],
-                         runner)
+    # wave 0 bootstraps the store; the server owns the streaming lifecycle
+    store = api.init_store("ppitc", kfn, params, ds.X[:wave_n],
+                           ds.y[:wave_n], S=S, runner=runner)
     server = GPServer(api.FittedGP(api.get("ppitc"), kfn, params,
-                                   online.to_state(store, S)),
-                      max_batch=512)
+                                   store.to_state()),
+                      max_batch=512, store=store)
     mean, _ = server.predict(ds.X_test)
     print(f"wave 1/{waves}: |D|={wave_n:6d} rmse={rmse(mean):.4f}")
 
-    # later waves fold in online; the server hot-swaps the state
+    # later waves fold in online; update() assimilates + hot-swaps in one go
     for w in range(1, waves):
         sl = slice(w * wave_n, (w + 1) * wave_n)
-        store = online.assimilate(store, kfn, params, S, ds.X[sl], ds.y[sl],
-                                  runner)
-        server.swap_state(online.to_state(store, S))
+        server.update(ds.X[sl], ds.y[sl])
         mean, _ = server.predict(ds.X_test)
         print(f"wave {w + 1}/{waves}: |D|={(w + 1) * wave_n:6d} "
               f"rmse={rmse(mean):.4f}")
     # pPITC states live in |S|-space, so every swap reuses the same
     # compiled executable (same pytree structure/shapes)
     print(f"server: {server.stats.n_batches} batches, "
-          f"{server.stats.n_state_swaps} state swaps")
+          f"{server.stats.n_state_swaps} state swaps "
+          f"({server.stats.n_updates} streaming updates)")
 
     # real-time deadline: predict with whatever summaries arrived
     print("\nstraggler deadline sweep (fraction of blocks included, rmse):")
-    rows = straggler.simulate(key, store, kfn, params, S, ds.X_test,
-                              ds.y_test, deadlines=(1.2, 1.5, 3.0, 60.0))
+    rows = straggler.simulate(key, server.store, ds.X_test, ds.y_test,
+                              deadlines=(1.2, 1.5, 3.0, 60.0))
     for r in rows:
         print(f"  deadline={r['deadline']:6.1f}  "
               f"included={r['fraction']:.2f}  rmse={r['rmse']:.4f}")

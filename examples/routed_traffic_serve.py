@@ -29,16 +29,28 @@ def main():
     params = cov.init_params(5, signal=1.0, noise=0.3, lengthscale=1.2)
     S = support.select_support(kfn, params, ds.X[:1024], s)
 
-    model = api.fit("ppic", kfn, params, ds.X, ds.y, S=S,
-                    runner=VmapRunner(M=M))
-    print(f"fitted pPIC: n={n} M={M} |S|={s}; "
+    # bootstrap on the first half of the morning's data; the second half
+    # will stream in through the store (Sec. 5.2) WITHOUT losing routing —
+    # the streamed PICState carries refreshed block centroids
+    store = api.init_store("ppic", kfn, params, ds.X[:n // 2],
+                           ds.y[:n // 2], S=S, runner=VmapRunner(M=M))
+    model = api.FittedGP(api.get("ppic"), kfn, params, store.to_state())
+    print(f"fitted pPIC: n={n // 2} M={M} |S|={s}; "
           f"block centroids cached: {model.state.centroids.shape}")
 
     # traffic simulation: requests trickle in one at a time on a virtual
     # clock; the deadline (not the batch size) decides when to predict
     t = [0.0]
     server = GPServer(model, max_batch=64, flush_deadline_ms=25.0,
-                      routed=True, clock=lambda: t[0])
+                      routed=True, store=store, clock=lambda: t[0])
+    # the second data wave streams in mid-morning: rank-b updates of the
+    # |S|-space factor + fresh block caches/centroids, hot-swapped into the
+    # ROUTED server (grown block axis -> exactly one recompile)
+    server.update(ds.X[n // 2:], ds.y[n // 2:])
+    model = server.model
+    print(f"streamed wave 2: blocks {n // 2 // M}x{M} -> "
+          f"{model.state.Xb.shape[1]}x{model.state.Xb.shape[0]}, "
+          f"centroids {model.state.centroids.shape}")
     rng = np.random.RandomState(0)
     order = rng.permutation(ds.X_test.shape[0])
     tickets = {}

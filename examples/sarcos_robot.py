@@ -8,13 +8,14 @@ machine failure + recovery.
     PYTHONPATH=src python examples/sarcos_robot.py [--n 4096] [--machines 8]
 """
 import argparse
+import dataclasses
 import tempfile
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.core import api, covariance as cov, hyper, online, support
+from repro.core import api, covariance as cov, hyper, serialize, support
 from repro.data import synthetic
 from repro.parallel.runner import VmapRunner
 from repro.runtime import fault
@@ -67,19 +68,29 @@ def main():
     print(f"pICF : rmse={rmse(meani):.4f} "
           f"mnlp={mnlp(meani, vari, ds.y_test):.3f}")
 
-    # --- checkpoint the summary store + failure recovery -------------------
+    # --- checkpoint posterior + summaries, then failure recovery -----------
     cluster = fault.build(kfn, params, S, ds.X, ds.y, runner)
     with tempfile.TemporaryDirectory() as tmp:
+        # the serving-facing checkpoint: the versioned PosteriorState npz
+        # (what a replica ships to its peers — core/serialize.py)
+        ckpt = serialize.save_state(f"{tmp}/ppic_state.npz", model.state)
+        meta = serialize.peek(ckpt)
+        print(f"state checkpoint: {meta['state']} v{meta['schema']} "
+              f"({len(meta['fields'])} fields)")
+        # the fit-side checkpoint: the summary pytree (fold-back source)
         mgr = CheckpointManager(tmp)
-        mgr.save(0, cluster.store)
+        mgr.save(0, cluster.store.store)
         cluster = fault.fail(cluster, machine=3)
-        mean_d, _ = online.predict_ppitc(cluster.store, kfn, params, S,
-                                         ds.X_test)
+        mean_d, _ = cluster.store.predict(ds.X_test)
         print(f"after machine-3 failure (degraded): rmse={rmse(mean_d):.4f}")
         _, restored = mgr.restore_latest(jax.tree.map(
-            lambda a: jnp.zeros_like(a), cluster.store))
-        mean_r, _ = online.predict_ppitc(restored, kfn, params, S, ds.X_test)
+            lambda a: jnp.zeros_like(a), cluster.store.store))
+        mean_r, _ = dataclasses.replace(cluster.store,
+                                        store=restored).predict(ds.X_test)
         print(f"after checkpoint restore:           rmse={rmse(mean_r):.4f}")
+        # the serialized posterior round-trips bitwise
+        assert all(bool(jnp.array_equal(a, b)) for a, b in
+                   zip(serialize.load_state(ckpt), model.state))
 
 
 if __name__ == "__main__":

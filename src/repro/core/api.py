@@ -16,17 +16,26 @@ Three layers:
   core module at import; ``get``/``names`` look methods up by string, which
   is what examples/benchmarks/serving use instead of hand-wired plumbing;
 * ``FittedGP``        — convenience pairing of (method, kfn, params, state)
-  with ``predict``/``predict_diag``/``with_state`` (hot-swap after
-  ``online.assimilate``/``retire``).
+  with ``predict``/``predict_diag``/``with_state`` (hot-swap after a
+  ``StateStore`` assimilate/retire).
 
 Fit is runner-agnostic: the summary/factor construction goes through
 ``parallel.runner.Runner.map``, so ``VmapRunner`` and ``ShardMapRunner``
 produce the same state pytree (tested in tests/test_shardmap.py).
+
+On top of the cached states sits the incremental-state layer (Sec. 5.2):
+``StateStore`` is the method-owned protocol that unifies cold fits,
+streaming assimilation, machine retirement, and checkpointing — a cold fit
+is just ``init_store(...).to_state()``, and every later mutation reuses the
+already-paid O(b³)/O(|S|³) work (``core/online.py`` for pPITC/pPIC,
+``core/picf.py`` for the ICF factor). ``core/serialize.py`` persists every
+registered state with a versioned schema so serving fleets can checkpoint,
+restore, and replicate posteriors.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
 
 import jax
 
@@ -85,6 +94,54 @@ class PICFState(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
+# Incremental-state protocol (Sec. 5.2 summary algebra, method-owned).
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class StateStore(Protocol):
+    """What a method's incremental state container must support.
+
+    A store owns everything ``fit`` needed (kernel, hyperparameters, support
+    set / rank, runner) plus the cached per-machine contributions, so the
+    update algebra is closed over it:
+
+    * ``assimilate(X_new, y_new)`` — fold a new data stream in as fresh
+      machine blocks, reusing every already-paid local factorization (the
+      paper's streaming add);
+    * ``retire(machine)`` / ``revive(machine)`` — subtract / re-add one
+      machine's contribution (failure, decommission, straggler deadline);
+    * ``to_state()`` — assemble the method's cached ``PosteriorState`` from
+      whatever machines are alive. Incremental by contract: implementations
+      keep the expensive global factor maintained via rank-b Cholesky
+      updates (``linalg.chol_update_rank``), so this is O(|S|²) per call,
+      not O(|S|³).
+
+    Stores are immutable: every mutation returns a new store, so serving can
+    hold the old one until the hot-swap commits. All methods are host-side
+    (they orchestrate jitted device work but are not themselves jitted).
+    """
+
+    def assimilate(self, X_new, y_new) -> "StateStore": ...
+
+    def retire(self, machine: int) -> "StateStore": ...
+
+    def revive(self, machine: int) -> "StateStore": ...
+
+    def to_state(self) -> Any: ...
+
+
+def check_machine_index(n_machines: int, machine: int) -> None:
+    """Shared retire/revive guard: reject out-of-range machine ids up
+    front. jnp clamps OOB gathers but silently DROPS OOB scatter updates,
+    so an unchecked bad index would downdate a clamped machine's cached
+    factor while leaving the alive mask untouched — silent store corruption
+    instead of an error."""
+    if not 0 <= machine < n_machines:
+        raise IndexError(
+            f"machine {machine} out of range for {n_machines} machines")
+
+
+# ---------------------------------------------------------------------------
 # Method registry.
 # ---------------------------------------------------------------------------
 
@@ -107,12 +164,20 @@ class GPMethod:
     ``None``: ``FittedGP.predict_routed_diag`` raises for them and
     ``GPServer(routed=True)`` rejects them at construction — their
     ``predict_diag`` already has the invariance routing buys.
+
+    ``init_store`` (optional) is the incremental-state entry point:
+    ``init_store(kfn, params, X, y, **kw) -> StateStore`` with the same
+    keyword subset as ``fit``. Methods without an incremental algebra
+    (``fgp`` — the exact Cholesky has no cheap update) leave it ``None``;
+    for the summary/factor methods ``fit`` IS ``init_store(...).to_state()``
+    so cold fits and streamed states share one code path.
     """
     name: str
     fit: Callable[..., Any]
     predict: Callable[..., Any]        # (kfn, params, state, U) -> posterior
     predict_diag: Callable[..., Any]   # (kfn, params, state, U) -> (mean, var)
     predict_routed_diag: Callable[..., Any] | None = None
+    init_store: Callable[..., "StateStore"] | None = None
 
 
 REGISTRY: dict[str, GPMethod] = {}
@@ -175,10 +240,7 @@ class FittedGP:
         return dataclasses.replace(self, state=state)
 
 
-def fit(name: str, kfn, params, X, y, *, S=None, M=None, rank=None,
-        runner=None) -> FittedGP:
-    """Registry front door: fit method ``name`` and return a FittedGP."""
-    method = get(name)
+def _method_kwargs(S=None, M=None, rank=None, runner=None) -> dict:
     kw = {}
     if S is not None:
         kw["S"] = S
@@ -188,5 +250,29 @@ def fit(name: str, kfn, params, X, y, *, S=None, M=None, rank=None,
         kw["rank"] = rank
     if runner is not None:
         kw["runner"] = runner
-    state = method.fit(kfn, params, X, y, **kw)
+    return kw
+
+
+def fit(name: str, kfn, params, X, y, *, S=None, M=None, rank=None,
+        runner=None) -> FittedGP:
+    """Registry front door: fit method ``name`` and return a FittedGP."""
+    method = get(name)
+    state = method.fit(kfn, params, X, y,
+                       **_method_kwargs(S, M, rank, runner))
     return FittedGP(method, kfn, params, state)
+
+
+def init_store(name: str, kfn, params, X, y, *, S=None, M=None, rank=None,
+               runner=None) -> StateStore:
+    """Registry front door for the incremental-state protocol: build method
+    ``name``'s ``StateStore`` from an initial data batch. The cold-fit state
+    is ``store.to_state()``; later ``assimilate``/``retire`` calls mutate
+    incrementally (see ``launch.gp_serve.GPServer.update``)."""
+    method = get(name)
+    if method.init_store is None:
+        raise ValueError(
+            f"method {name!r} has no incremental StateStore (its cached "
+            f"state has no cheap update algebra); have "
+            f"{[m for m in names() if REGISTRY[m].init_store is not None]}")
+    return method.init_store(kfn, params, X, y,
+                             **_method_kwargs(S, M, rank, runner))

@@ -73,6 +73,20 @@ def uncluster(values: np.ndarray, perm: np.ndarray) -> np.ndarray:
     return out
 
 
+def nearest_center_np(X: np.ndarray, centers: np.ndarray) -> np.ndarray:
+    """(n,) index of each row's nearest center — host-side NumPy.
+
+    The serving queue groups tickets by target block BEFORE any device work
+    (launch/gp_serve.py), so this must not touch XLA; it is the host mirror
+    of ``ppic.route_queries`` (same centers, same squared-distance argmin),
+    kept here so fit-time assignment and serve-time grouping share one
+    definition.
+    """
+    X, centers = np.asarray(X), np.asarray(centers)
+    d2 = ((X[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+    return d2.argmin(axis=1)
+
+
 def block_centroids(Xb) -> jax.Array:
     """(M, b, d) block layout -> (M, d) per-block data centroids.
 

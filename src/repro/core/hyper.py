@@ -65,10 +65,19 @@ def pitc_nlml(kfn, params, S, X, y, runner: Runner) -> jax.Array:
     return vals[0]
 
 
-def fit(kfn, params, X, y, *, steps: int = 200, lr: float = 0.05,
+def fit(kfn, params, X=None, y=None, *, steps: int = 200, lr: float = 0.05,
         objective=None) -> tuple[dict, jax.Array]:
-    """Adam on the (exact, by default) negative log marginal likelihood."""
+    """Adam on the (exact, by default) negative log marginal likelihood.
+
+    ``objective`` overrides the data-bound default entirely; (X, y) are
+    only consulted — and only then required — when no objective is given,
+    so custom-objective callers (fit_parallel) don't thread unused data
+    through."""
     if objective is None:
+        if X is None or y is None:
+            raise ValueError(
+                "hyper.fit needs (X, y) for the default exact-NLML "
+                "objective; pass data or a custom objective")
         objective = lambda p: gp.nlml(kfn, p, X, y)
     opt = Adam(lr=lr)
     state = opt.init(params)
@@ -88,6 +97,8 @@ def fit(kfn, params, X, y, *, steps: int = 200, lr: float = 0.05,
 
 def fit_parallel(kfn, params, S, X, y, runner: Runner, *, steps: int = 200,
                  lr: float = 0.05) -> tuple[dict, jax.Array]:
-    """MLE on ALL data via the distributable PITC likelihood."""
+    """MLE on ALL data via the distributable PITC likelihood. The data is
+    bound inside the objective; ``fit`` never sees it (it would only be
+    captured by the unused exact-NLML default)."""
     obj = lambda p: pitc_nlml(kfn, p, S, X, y, runner)
-    return fit(kfn, params, X, y, steps=steps, lr=lr, objective=obj)
+    return fit(kfn, params, steps=steps, lr=lr, objective=obj)

@@ -7,6 +7,8 @@ paths in float32).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -53,3 +55,65 @@ def tri_solve(L: jax.Array, B: jax.Array, *, lower: bool = True,
 
 def logdet_from_chol(L: jax.Array) -> jax.Array:
     return 2.0 * jnp.sum(jnp.log(jnp.diag(L)))
+
+
+# ---------------------------------------------------------------------------
+# Rank-1 / rank-b Cholesky updates (paper Sec. 5.2 incremental summaries).
+#
+# The streaming argument needs chol(A + W Wᵀ) from chol(A) without the O(n³)
+# refactorization: one LINPACK-style rotation sweep per update vector is
+# O(n²), so folding a b-column factor costs O(n² b). ``sign=-1`` is the
+# downdate (machine retirement / summary subtraction); it is well-defined
+# only while A - W Wᵀ stays positive definite — exactly the summary-algebra
+# guarantee (removing a block's PSD contribution from Sdd never crosses
+# K_SS), so no rank-revealing fallback is needed here.
+# ---------------------------------------------------------------------------
+
+def _chol_rank1(L: jax.Array, w: jax.Array, sign: float) -> jax.Array:
+    """chol(L Lᵀ + sign·w wᵀ) via one sweep of (hyperbolic) rotations."""
+    n = L.shape[0]
+    idx = jnp.arange(n)
+
+    def body(k, carry):
+        L, w = carry
+        Lkk, wk = L[k, k], w[k]
+        r = jnp.sqrt(jnp.maximum(Lkk * Lkk + sign * wk * wk,
+                                 jnp.finfo(L.dtype).tiny))
+        c, s = r / Lkk, wk / Lkk
+        below = idx > k
+        col = jnp.where(below, (L[:, k] + sign * s * w) / c, L[:, k])
+        col = col.at[k].set(r)
+        w = jnp.where(below, c * w - s * col, w)
+        return L.at[:, k].set(col), w
+
+    L, _ = jax.lax.fori_loop(0, n, body, (L, w))
+    return L
+
+
+@jax.jit
+def cholupdate(L: jax.Array, w: jax.Array) -> jax.Array:
+    """Lower Cholesky of (L Lᵀ + w wᵀ) in O(n²)."""
+    return _chol_rank1(L, w, 1.0)
+
+
+@jax.jit
+def choldowndate(L: jax.Array, w: jax.Array) -> jax.Array:
+    """Lower Cholesky of (L Lᵀ - w wᵀ) in O(n²); requires the difference to
+    remain positive definite (guaranteed when removing a PSD contribution
+    that was previously folded in)."""
+    return _chol_rank1(L, w, -1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("sign",))
+def chol_update_rank(L: jax.Array, W: jax.Array, *,
+                     sign: float = 1.0) -> jax.Array:
+    """Lower Cholesky of (L Lᵀ + sign·W Wᵀ) for an (n, b) factor W: b
+    sequential rank-1 sweeps, O(n² b) total — the incremental ``to_state``
+    path (vs O(n³) refactorization). Jitted (one executable per (n, b)
+    shape): the sweeps are sequential scalar-ish work that would otherwise
+    pay per-op dispatch on the streaming hot path."""
+    def step(L, w):
+        return _chol_rank1(L, w, sign), None
+
+    L, _ = jax.lax.scan(step, L, W.T)
+    return L

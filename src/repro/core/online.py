@@ -10,21 +10,38 @@ local summaries, so:
   data (runtime/fault.py builds on this);
 * elastic scale-up/down is re-blocking + re-summing cached summaries.
 
-The store keeps the stacked per-machine summaries (cheap: M x (|S| + |S|^2))
-and the running global summary. It is the fit-side *producer* of the cached
-``api.PITCState``: ``to_state`` assembles the S-space factors
-(Kss_L, Sdd_L, alpha) from whatever machines are alive, which is what
-``ppitc.fit`` calls for a cold fit and what serving hot-swaps after
-``assimilate``/``retire`` (launch/gp_serve.py).
+Two layers here:
+
+* ``SummaryStore`` — the pure-array pytree of stacked per-machine summaries
+  (cheap: M x (|S| + |S|² + |S|·b)) PLUS the incrementally-maintained global
+  factors. Every local summary Σ-dot_SS^m is PSD with the explicit low-rank
+  factor F_m = K_SDm chol(Σ_{DmDm|S})^{-T} (Σ-dot^m = F_m F_mᵀ), so folding a
+  machine in/out is a rank-b Cholesky update/downdate of ``Sdd_L``
+  (``linalg.chol_update_rank``) — O(|S|²·b) instead of the O(|S|³)
+  re-factorization, which makes ``to_state`` an O(|S|²) solve.
+* ``PITCStore`` / ``PICStore`` — the method-owned ``api.StateStore``
+  implementations (registered via ``GPMethod.init_store`` by core/ppitc.py
+  and core/ppic.py). ``PITCStore`` emits ``api.PITCState``; ``PICStore``
+  additionally carries the per-block caches of eqs. (12)-(14) and emits
+  ``api.PICState`` with alive-block selection and centroid refresh, so
+  ``GPServer(routed=True)`` hot-swaps streamed data too.
+
+The module-level free functions (``build``/``assimilate``/``retire``/
+``revive``/``to_state``/``predict_ppitc``) are the underlying SummaryStore
+algebra; prefer the ``api.StateStore`` protocol (``api.init_store``) in new
+code — the free functions survive as the implementation + back-compat
+surface for callers that hold a bare ``SummaryStore``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import api, linalg
+from repro.core import api, clustering, linalg
 from repro.core.ppitc import (GlobalSummary, LocalSummary, local_summary,
                               predict_batch)
 from repro.parallel.runner import Runner
@@ -32,26 +49,74 @@ from repro.parallel.runner import Runner
 
 class SummaryStore(NamedTuple):
     locals_: LocalSummary     # stacked (M, ...) per-machine summaries
+    F: jax.Array              # (M, s, b) low-rank factors: Sdot_m = F_m F_mᵀ
     alive: jax.Array          # (M,) bool — machine participation mask
     Kss: jax.Array            # (s, s) prior support covariance
+    Kss_L: jax.Array          # (s, s) chol K_SS (static across mutations)
+    Sdd_L: jax.Array          # (s, s) chol of the ALIVE Σ-dot-dot (cached,
+    #                           maintained by rank-b updates — never refolded)
+    ydd: jax.Array            # (s,)   alive Σ_m y-dot^m (cached)
 
 
-def build(kfn, params, S, X, y, runner: Runner) -> SummaryStore:
-    """Initial store from blocked data (paper Steps 1-3)."""
+def _sdd_chol(Kss: jax.Array, Sdd: jax.Array) -> jax.Array:
+    """chol(Sdd + jitter·I) with the jitter anchored to K_SS.
+
+    Anchoring to the (mutation-invariant) prior scale instead of mean
+    diag(Sdd) makes the cold factorization and the incrementally-updated one
+    factor THE SAME matrix: assimilate/retire then differ from a full
+    recompute only by rank-update roundoff (~1e-13 in float64), not by a
+    data-dependent jitter drift.
+    """
+    scale = linalg.default_jitter(Sdd.dtype) * jnp.mean(jnp.diag(Kss))
+    return jnp.linalg.cholesky(
+        Sdd + scale * jnp.eye(Sdd.shape[-1], dtype=Sdd.dtype))
+
+
+def _summarize(kfn, params, S, X, y, runner: Runner):
+    """Per-machine local summaries + low-rank factors (paper Steps 1-2)."""
     Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
 
     def fn(Xm, ym, params, S):
         Kss_L = linalg.chol(kfn(params, S, S))
-        loc, _ = local_summary(kfn, params, S, Kss_L, Xm, ym)
-        return loc
+        loc, (Ksd, C_L, _) = local_summary(kfn, params, S, Kss_L, Xm, ym)
+        F = linalg.tri_solve(C_L, Ksd.T).T        # (s, b): Sdot = F Fᵀ
+        return loc, F
 
-    locals_ = runner.map(fn, (Xb, yb), (params, S))
-    alive = jnp.ones((runner.num_machines,), bool)
-    return SummaryStore(locals_, alive, kfn(params, S, S))
+    return runner.map(fn, (Xb, yb), (params, S))
+
+
+def _pad_factor(F: jax.Array, b: int) -> jax.Array:
+    """Zero-pad the block axis of an (M, s, b') factor to width b. Padded
+    columns contribute 0·0ᵀ to F Fᵀ, so the algebra is unchanged — this is
+    what lets waves of different block sizes share one stacked store."""
+    if F.shape[-1] >= b:
+        return F
+    return jnp.pad(F, [(0, 0), (0, 0), (0, b - F.shape[-1])])
+
+
+def _cold_store(kfn, params, S, locals_: LocalSummary,
+                F: jax.Array) -> SummaryStore:
+    """Assemble a SummaryStore from freshly-summarized blocks: the ONE
+    place the global factor is Cholesky'd from scratch (cold O(|S|³), paid
+    once per store lifetime) — shared by the PITC and PIC builders so both
+    anchor the same jitter to the same matrix."""
+    alive = jnp.ones((locals_.ydot.shape[0],), bool)
+    Kss = kfn(params, S, S)
+    ydd = jnp.sum(locals_.ydot, axis=0)
+    Sdd_L = _sdd_chol(Kss, Kss + jnp.sum(locals_.Sdot, axis=0))
+    return SummaryStore(locals_, F, alive, Kss, linalg.chol(Kss), Sdd_L, ydd)
+
+
+def build(kfn, params, S, X, y, runner: Runner) -> SummaryStore:
+    """Initial store from blocked data (paper Steps 1-3)."""
+    locals_, F = _summarize(kfn, params, S, X, y, runner)
+    return _cold_store(kfn, params, S, locals_, F)
 
 
 def global_summary(store: SummaryStore) -> GlobalSummary:
-    """Assemble eqs. (5)-(6) from whatever machines are alive."""
+    """Assemble eqs. (5)-(6) from whatever machines are alive — the full
+    (non-incremental) reference the cached ``Sdd_L``/``ydd`` are tested
+    against; use it for arbitrary alive-mask views (``with_alive``)."""
     w = store.alive.astype(store.locals_.ydot.dtype)
     ydd = jnp.einsum("m,ms->s", w, store.locals_.ydot)
     Sdd = store.Kss + jnp.einsum("m,mst->st", w, store.locals_.Sdot)
@@ -61,36 +126,94 @@ def global_summary(store: SummaryStore) -> GlobalSummary:
 def to_state(store: SummaryStore, S: jax.Array) -> api.PITCState:
     """Assemble the cached prediction factors (eqs. 7-8 precomputation).
 
-    This is the O(|S|^3) step — done once per store mutation, after which
-    every ``ppitc.predict_batch`` call is O(|U||S| + |S|^2)."""
-    glob = global_summary(store)
-    Kss_L = linalg.chol(store.Kss)
-    Sdd_L = linalg.chol(glob.Sdd)
-    alpha = linalg.chol_solve(Sdd_L, glob.ydd[:, None])[:, 0]
-    return api.PITCState(S, Kss_L, Sdd_L, alpha)
+    O(|S|²): ``Sdd_L`` is maintained incrementally by assimilate/retire, so
+    only the weight solve remains here — the |S|³ factorization happens once
+    at ``build`` and never again across the store's lifetime."""
+    alpha = linalg.chol_solve(store.Sdd_L, store.ydd[:, None])[:, 0]
+    return api.PITCState(S, store.Kss_L, store.Sdd_L, alpha)
+
+
+def _fold_in(store: SummaryStore, locals_new: LocalSummary,
+             F_new: jax.Array) -> SummaryStore:
+    """Append new machine blocks and rank-update the cached global factors."""
+    b = max(store.F.shape[-1], F_new.shape[-1])
+    merged = LocalSummary(
+        jnp.concatenate([store.locals_.ydot, locals_new.ydot]),
+        jnp.concatenate([store.locals_.Sdot, locals_new.Sdot]))
+    F = jnp.concatenate([_pad_factor(store.F, b), _pad_factor(F_new, b)])
+    alive = jnp.concatenate(
+        [store.alive, jnp.ones((F_new.shape[0],), bool)])
+    # one rank-(M'·b) update: stack the new machines' factor columns
+    W = jnp.concatenate([f for f in F_new], axis=1)        # (s, M'·b)
+    Sdd_L = linalg.chol_update_rank(store.Sdd_L, W)
+    ydd = store.ydd + jnp.sum(locals_new.ydot, axis=0)
+    return SummaryStore(merged, F, alive, store.Kss, store.Kss_L, Sdd_L, ydd)
 
 
 def assimilate(store: SummaryStore, kfn, params, S, X_new, y_new,
                runner: Runner) -> SummaryStore:
     """Fold a new data stream (D', y_D') in — Sec. 5.2.
 
-    The new blocks are summarized in parallel and appended; old summaries are
-    reused untouched (this is the saving over recomputing eqs. 3-4 for D)."""
-    new = build(kfn, params, S, X_new, y_new, runner)
-    merged = LocalSummary(
-        jnp.concatenate([store.locals_.ydot, new.locals_.ydot]),
-        jnp.concatenate([store.locals_.Sdot, new.locals_.Sdot]))
-    alive = jnp.concatenate([store.alive, new.alive])
-    return SummaryStore(merged, alive, store.Kss)
+    The new blocks are summarized in parallel and appended; old summaries
+    are reused untouched, and the global factor is advanced by a rank-b
+    Cholesky update per new block — O(|S|²·b) each, no |S|³ anywhere."""
+    locals_new, F_new = _summarize(kfn, params, S, X_new, y_new, runner)
+    return _fold_in(store, locals_new, F_new)
 
 
 def retire(store: SummaryStore, machine: int) -> SummaryStore:
-    """Drop a machine's contribution (failure or decommission)."""
-    return store._replace(alive=store.alive.at[machine].set(False))
+    """Drop a machine's contribution (failure or decommission): rank-b
+    DOWNdate of the cached factor. No-op if already retired."""
+    api.check_machine_index(store.alive.shape[0], machine)
+    if not bool(store.alive[machine]):
+        return store
+    Sdd_L = linalg.chol_update_rank(store.Sdd_L, store.F[machine], sign=-1.0)
+    return store._replace(alive=store.alive.at[machine].set(False),
+                          Sdd_L=Sdd_L,
+                          ydd=store.ydd - store.locals_.ydot[machine])
 
 
 def revive(store: SummaryStore, machine: int) -> SummaryStore:
-    return store._replace(alive=store.alive.at[machine].set(True))
+    """Fold a previously-retired machine back in (rank-b update)."""
+    api.check_machine_index(store.alive.shape[0], machine)
+    if bool(store.alive[machine]):
+        return store
+    Sdd_L = linalg.chol_update_rank(store.Sdd_L, store.F[machine])
+    return store._replace(alive=store.alive.at[machine].set(True),
+                          Sdd_L=Sdd_L,
+                          ydd=store.ydd + store.locals_.ydot[machine])
+
+
+def with_alive(store: SummaryStore, alive: jax.Array) -> SummaryStore:
+    """Arbitrary alive-mask view (straggler deadlines flip many machines at
+    once): re-derives the cached factors from the mask in one O(|S|³) pass —
+    cheaper than a chain of updates when most of the mask changed, and the
+    one sanctioned way to set ``alive`` wholesale (a raw ``_replace`` would
+    desynchronize the cache)."""
+    alive = jnp.asarray(alive, bool)
+    store = store._replace(alive=alive)
+    glob = global_summary(store)
+    return store._replace(Sdd_L=_sdd_chol(store.Kss, glob.Sdd),
+                          ydd=glob.ydd)
+
+
+def replace_block(store: SummaryStore, kfn, params, S, machine: int,
+                  Xm, ym) -> SummaryStore:
+    """Recompute ONE machine's summary from its (re-read) data shard and
+    fold it in alive — the fault-recovery reassign path. Incremental: at
+    most one downdate (if the stale summary was still folded in) plus one
+    update."""
+    api.check_machine_index(store.alive.shape[0], machine)
+    store = retire(store, machine)
+    loc, (Ksd, C_L, _) = local_summary(kfn, params, S, store.Kss_L, Xm, ym)
+    F_m = linalg.tri_solve(C_L, Ksd.T).T
+    b = max(store.F.shape[-1], F_m.shape[-1])
+    F_m = _pad_factor(F_m[None], b)[0]
+    locs = LocalSummary(store.locals_.ydot.at[machine].set(loc.ydot),
+                        store.locals_.Sdot.at[machine].set(loc.Sdot))
+    store = store._replace(locals_=locs, F=_pad_factor(store.F, b)
+                           .at[machine].set(F_m))
+    return revive(store, machine)
 
 
 def predict_ppitc(store: SummaryStore, kfn, params, S, U) -> tuple:
@@ -98,3 +221,183 @@ def predict_ppitc(store: SummaryStore, kfn, params, S, U) -> tuple:
     over ``to_state`` + ``ppitc.predict_batch``."""
     post = predict_batch(kfn, params, to_state(store, S), U)
     return post.mean, post.cov
+
+
+# ---------------------------------------------------------------------------
+# Method-owned StateStore implementations (api.StateStore protocol).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PITCStore:
+    """pPITC's ``api.StateStore``: owns the fit context, emits PITCState.
+
+    Immutable — every mutation returns a new store sharing the untouched
+    leaves, so serving can keep the previous store alive until a hot-swap
+    commits (launch/gp_serve.py).
+    """
+    kfn: object
+    params: dict
+    S: jax.Array
+    runner: Runner
+    store: SummaryStore
+
+    # -- protocol -----------------------------------------------------------
+
+    def assimilate(self, X_new, y_new, runner: Runner | None = None
+                   ) -> "PITCStore":
+        """Fold a new stream in. ``runner`` overrides how the WAVE is
+        blocked (elastic scale-up arrives on however many machines it
+        arrives on); defaults to the fit-time runner."""
+        return dataclasses.replace(self, store=assimilate(
+            self.store, self.kfn, self.params, self.S, X_new, y_new,
+            runner or self.runner))
+
+    def retire(self, machine: int) -> "PITCStore":
+        new = retire(self.store, machine)
+        return self if new is self.store else \
+            dataclasses.replace(self, store=new)
+
+    def revive(self, machine: int) -> "PITCStore":
+        new = revive(self.store, machine)
+        return self if new is self.store else \
+            dataclasses.replace(self, store=new)
+
+    def to_state(self) -> api.PITCState:
+        return to_state(self.store, self.S)
+
+    # -- beyond-protocol surface (fault/straggler runtimes) -----------------
+
+    @property
+    def alive(self) -> jax.Array:
+        return self.store.alive
+
+    @property
+    def num_machines(self) -> int:
+        return int(self.store.alive.shape[0])
+
+    def with_alive(self, alive) -> "PITCStore":
+        return dataclasses.replace(self, store=with_alive(self.store, alive))
+
+    def reassign(self, machine: int, Xm, ym) -> "PITCStore":
+        return dataclasses.replace(self, store=replace_block(
+            self.store, self.kfn, self.params, self.S, machine, Xm, ym))
+
+    def global_summary(self) -> GlobalSummary:
+        return global_summary(self.store)
+
+    def predict(self, U) -> tuple:
+        """(mean, cov) over U from the current alive set."""
+        return predict_ppitc(self.store, self.kfn, self.params, self.S, U)
+
+
+def init_pitc_store(kfn, params, X, y, *, S, runner: Runner) -> PITCStore:
+    """``GPMethod.init_store`` for ppitc/pitc (registered in core/ppitc.py)."""
+    return PITCStore(kfn, params, S, runner,
+                     build(kfn, params, S, X, y, runner))
+
+
+class PICBlocks(NamedTuple):
+    """Per-block caches for the pPIC local correction (eqs. 12-14); the
+    global algebra lives in the shared SummaryStore. Leading axis M."""
+    Xb: jax.Array      # (M, b, d)
+    yb: jax.Array      # (M, b)
+    Ksd: jax.Array     # (M, s, b)
+    C_L: jax.Array     # (M, b, b)
+    Wy: jax.Array      # (M, b)
+    beta: jax.Array    # (M, s)
+    B: jax.Array       # (M, s, s)
+
+
+def _summarize_pic(kfn, params, S, X, y, runner: Runner):
+    """Per-machine summaries + the eqs. (12)-(14) caches, one map."""
+    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+
+    def fn(Xm, ym, params, S):
+        Kss_L = linalg.chol(kfn(params, S, S))
+        loc, (Ksd, C_L, Wy) = local_summary(kfn, params, S, Kss_L, Xm, ym)
+        F = linalg.tri_solve(C_L, Ksd.T).T
+        beta = linalg.chol_solve(Kss_L, loc.ydot[:, None])[:, 0]
+        B = linalg.chol_solve(Kss_L, loc.Sdot)
+        return loc, F, Ksd, C_L, Wy, beta, B
+
+    loc, F, Ksd, C_L, Wy, beta, B = runner.map(fn, (Xb, yb), (params, S))
+    return loc, F, PICBlocks(Xb, yb, Ksd, C_L, Wy, beta, B)
+
+
+@dataclasses.dataclass(frozen=True)
+class PICStore:
+    """pPIC's ``api.StateStore``: the PITC global algebra + per-block local
+    caches; ``to_state`` emits an ``api.PICState`` over the ALIVE blocks
+    with refreshed centroids, so ``GPServer(routed=True)`` hot-swaps
+    streamed data (Remark 2 keeps holding: routing targets are exactly the
+    blocks that can serve a local correction).
+
+    Streamed waves must keep the fit-time block size (|D'|/M' == b): the
+    block caches are stacked arrays, and zero-padding *data* rows would
+    inject spurious noise-only observations into Σ_{DmDm|S} (see
+    Runner.shard_blocks). Retiring a machine shrinks the state's block axis
+    at the next ``to_state`` — one serving recompile, flagged by gp_serve.
+    """
+    kfn: object
+    params: dict
+    S: jax.Array
+    runner: Runner
+    store: SummaryStore
+    blocks: PICBlocks
+
+    @property
+    def block_size(self) -> int:
+        return int(self.blocks.Xb.shape[1])
+
+    def assimilate(self, X_new, y_new, runner: Runner | None = None
+                   ) -> "PICStore":
+        runner = runner or self.runner
+        M_new = runner.num_machines
+        b_new = X_new.shape[0] // M_new
+        if X_new.shape[0] % M_new or b_new != self.block_size:
+            raise ValueError(
+                f"pPIC streaming keeps the fit-time block size: got "
+                f"|D'|={X_new.shape[0]} over M={M_new} machines "
+                f"(b={X_new.shape[0] / M_new:g}) but the store's blocks are "
+                f"b={self.block_size}. Re-chunk the wave (or use the pPITC "
+                f"store, which accepts any block size).")
+        loc, F, blocks_new = _summarize_pic(self.kfn, self.params, self.S,
+                                            X_new, y_new, runner)
+        merged = PICBlocks(*(jnp.concatenate([a, b]) for a, b in
+                             zip(self.blocks, blocks_new)))
+        return dataclasses.replace(
+            self, store=_fold_in(self.store, loc, F), blocks=merged)
+
+    def retire(self, machine: int) -> "PICStore":
+        new = retire(self.store, machine)
+        return self if new is self.store else \
+            dataclasses.replace(self, store=new)
+
+    def revive(self, machine: int) -> "PICStore":
+        new = revive(self.store, machine)
+        return self if new is self.store else \
+            dataclasses.replace(self, store=new)
+
+    def to_state(self) -> api.PICState:
+        st = self.store
+        glob = to_state(st, self.S)      # shared O(|S|²) global-factor path
+        if bool(st.alive.all()):
+            # streaming common case: no gather — every block cache (incl.
+            # the full Xb dataset) is passed through by reference, keeping
+            # update() at the advertised O(|S|² b)
+            blk, loc = self.blocks, st.locals_
+        else:
+            idx = jnp.asarray(np.flatnonzero(np.asarray(st.alive)))
+            blk = PICBlocks(*(a[idx] for a in self.blocks))
+            loc = LocalSummary(st.locals_.ydot[idx], st.locals_.Sdot[idx])
+        return api.PICState(
+            self.S, glob.Kss_L, glob.Sdd_L, glob.alpha, blk.Xb, blk.yb,
+            blk.Ksd, blk.C_L, blk.Wy, loc.ydot, blk.beta, blk.B, loc.Sdot,
+            clustering.block_centroids(blk.Xb))
+
+
+def init_pic_store(kfn, params, X, y, *, S, runner: Runner) -> PICStore:
+    """``GPMethod.init_store`` for ppic/pic (registered in core/ppic.py)."""
+    loc, F, blocks = _summarize_pic(kfn, params, S, X, y, runner)
+    return PICStore(kfn, params, S, runner,
+                    _cold_store(kfn, params, S, loc, F), blocks)

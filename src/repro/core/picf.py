@@ -25,10 +25,12 @@ Zero prior mean assumed.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import api
 from repro.core import covariance as cov
@@ -41,6 +43,10 @@ from repro.parallel.runner import Runner
 class ICFLocal(NamedTuple):
     F: jax.Array         # (R, b) this machine's factor columns
     residual: jax.Array  # (b,)   local diagonal residual
+    pivots: jax.Array    # (R, d) pivot INPUTS in selection order (replicated)
+    Lp: jax.Array        # (R, R) lower factor at the pivots: chol K_PP
+    #                      (replicated) — row i is pivot i's factor column,
+    #                      which is what extends the factor to unseen rows
 
 
 def icf_factor_local(kfn, params, Xm, R: int, *, axis_name) -> ICFLocal:
@@ -49,16 +55,24 @@ def icf_factor_local(kfn, params, Xm, R: int, *, axis_name) -> ICFLocal:
     Concatenating the returned F over machines (in machine order) equals the
     centralized ``core.icf.icf_factor`` on concatenated data, pivot-for-pivot
     (Theorem-3 equivalence test).
+
+    The pivot sequence (inputs + triangular factor at the pivots) is
+    recorded on the side: for any unseen point x the consistent factor
+    column is the forward solve ``Lp f = k(P, x)`` — the streaming
+    row-append path of ``PICFStore`` (no rank loop per new block).
     """
     b = Xm.shape[0]
     m_idx = jax.lax.axis_index(axis_name)
     d0 = cov.kdiag(kfn, params, Xm)
-    # zeros + 0*d0 marks F0 as device-varying so the shard_map scan carry
-    # type-checks (VMA inference); a no-op after fusion.
+    # zeros + 0*d0 marks the carries as device-varying so the shard_map scan
+    # carry type-checks (VMA inference); a no-op after fusion.
+    vary = 0.0 * d0[0]
     F0 = jnp.zeros((R, b), d0.dtype) + 0.0 * d0[None, :]
+    Xp0 = jnp.zeros((R, Xm.shape[1]), d0.dtype) + vary
+    Lp0 = jnp.zeros((R, R), d0.dtype) + vary
 
     def step(i, carry):
-        F, d = carry
+        F, d, Xp, Lp = carry
         # --- global pivot selection: argmax over machines of local maxima
         local_max = jnp.max(d)
         local_arg = jnp.argmax(d)
@@ -69,16 +83,21 @@ def icf_factor_local(kfn, params, Xm, R: int, *, axis_name) -> ICFLocal:
         # --- owner broadcasts pivot input x_p and partial column F[:, p]
         xp = jax.lax.psum(jnp.where(is_owner, Xm[local_arg], 0.0), axis_name)
         fp = jax.lax.psum(jnp.where(is_owner, F[:, local_arg], 0.0), axis_name)
+        rp = jnp.sqrt(jnp.maximum(dp, 1e-30))
+        # pivot i's factor column after this step is (fp, rp, 0...): record
+        # it as row i of the pivot-triangle (fp rows >= i are still zero)
+        Xp = Xp.at[i].set(xp)
+        Lp = Lp.at[i].set(fp.at[i].set(rp))
         # --- local rank-1 update (each machine only touches its columns)
         col = kfn(params, xp[None], Xm)[0]                    # K[p, D_m]
-        f = (col - F.T @ fp) / jnp.sqrt(jnp.maximum(dp, 1e-30))
+        f = (col - F.T @ fp) / rp
         F = jax.lax.dynamic_update_slice_in_dim(F, f[None], i, axis=0)
         d = jnp.maximum(d - f * f, 0.0)
         d = jnp.where(is_owner, d.at[local_arg].set(0.0), d)
-        return F, d
+        return F, d, Xp, Lp
 
-    F, d = jax.lax.fori_loop(0, R, step, (F0, d0))
-    return ICFLocal(F, d)
+    F, d, Xp, Lp = jax.lax.fori_loop(0, R, step, (F0, d0, Xp0, Lp0))
+    return ICFLocal(F, d, Xp, Lp)
 
 
 def _global_pieces(params, Fm, ym, Sdot_m, *, axis_name):
@@ -183,17 +202,12 @@ def factor(kfn, params, X, R: int, runner: Runner) -> ICFLocal:
 # ---------------------------------------------------------------------------
 
 def fit(kfn, params, X, y, *, rank: int, runner: Runner) -> api.PICFState:
-    """Distributed ICF (the O(R^2 |D|/M) part) + cached R-space solves."""
-    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
-    local = factor(kfn, params, X, rank, runner)            # (M, R, b)
-    s2 = cov.noise_var(params)
-    R = local.F.shape[1]
-    Phi = jnp.eye(R, dtype=local.F.dtype) \
-        + jnp.sum(jnp.einsum("mrb,msb->mrs", local.F, local.F), 0) / s2
-    Phi_L = linalg.chol(Phi, jitter=0.0)                    # eq. 21
-    yF = jnp.sum(jnp.einsum("mrb,mb->mr", local.F, yb), 0)  # eq. 19
-    ydd = linalg.chol_solve(Phi_L, yF[:, None])[:, 0]       # eq. 22
-    return api.PICFState(Xb, yb, local.F, Phi_L, ydd)
+    """Distributed ICF (the O(R^2 |D|/M) part) + cached R-space solves.
+
+    ``PICFStore`` (below) is the fit-side producer, so cold fits and the
+    streaming row-append/retire path share one code path."""
+    return init_picf_store(kfn, params, X, y, rank=rank,
+                           runner=runner).to_state()
 
 
 def predict_batch(kfn, params, state: api.PICFState, U, *,
@@ -268,4 +282,123 @@ def predict_distributed(kfn, params, X, y, U, R: int, runner: Runner):
     return GPPosterior(means[0], covs[0])
 
 
-api.register(api.GPMethod("picf", fit, predict_batch, predict_batch_diag))
+# ---------------------------------------------------------------------------
+# Incremental state (api.StateStore): row-append / retire on the ICF factor.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PICFStore:
+    """pICF's ``api.StateStore`` over the distributed rank-R factor.
+
+    The fit-time pivot basis is FROZEN: a streamed block's factor columns
+    are the Nyström-consistent extension ``F_new = Lp^{-1} K_{P,D'}``
+    (standard streaming ICF — the same forward solve the rank loop performs
+    per pivot, batched over the new rows), so appending b rows costs
+    O(R²·b) and the global R-space factor advances by a rank-b Cholesky
+    update of ``Phi_L`` (eq. 21) instead of an O(R³) refactorization.
+    Retiring a machine downdates by its factor columns — the summary
+    algebra of eqs. (19)/(21) is a sum over machines, same as pPITC's.
+
+    Note the retired/streamed posterior lives in the ORIGINAL pivot basis;
+    a from-scratch refit would re-pivot greedily. That is the standard
+    streaming trade: the basis stays optimal for the fit-time data and
+    Nyström-extends to new rows.
+    """
+    kfn: object
+    params: dict
+    runner: Runner
+    Xb: jax.Array      # (M, b, d)
+    yb: jax.Array      # (M, b)
+    F: jax.Array       # (M, R, b)
+    Xp: jax.Array      # (R, d) pivot inputs
+    Lp: jax.Array      # (R, R) pivot triangle (chol K_PP)
+    alive: jax.Array   # (M,) bool
+    Phi_L: jax.Array   # (R, R) cached chol(I + Σ_alive F_m F_mᵀ / s2)
+    yF: jax.Array      # (R,)   cached Σ_alive F_m y_m
+
+    @property
+    def block_size(self) -> int:
+        return int(self.Xb.shape[1])
+
+    def _scaled(self, Fm: jax.Array) -> jax.Array:
+        """Factor columns as Phi update vectors: Phi += (F/σ)(F/σ)ᵀ."""
+        return Fm / jnp.sqrt(cov.noise_var(self.params))
+
+    def assimilate(self, X_new, y_new,
+                   runner: Runner | None = None) -> "PICFStore":
+        runner = runner or self.runner
+        M_new = runner.num_machines
+        b = X_new.shape[0] // M_new
+        if X_new.shape[0] % M_new or b != self.block_size:
+            raise ValueError(
+                f"pICF streaming keeps the fit-time block size: got "
+                f"|D'|={X_new.shape[0]} over M={M_new} machines but the "
+                f"store's blocks are b={self.block_size}; re-chunk the wave.")
+        Xb_new = runner.shard_blocks(X_new)
+        yb_new = runner.shard_blocks(y_new)
+        # Nyström extension in the frozen pivot basis, one forward solve
+        F_new = jax.vmap(lambda Xm: linalg.tri_solve(
+            self.Lp, self.kfn(self.params, self.Xp, Xm)))(Xb_new)
+        W = jnp.concatenate([self._scaled(f) for f in F_new], axis=1)
+        return dataclasses.replace(
+            self,
+            Xb=jnp.concatenate([self.Xb, Xb_new]),
+            yb=jnp.concatenate([self.yb, yb_new]),
+            F=jnp.concatenate([self.F, F_new]),
+            alive=jnp.concatenate(
+                [self.alive, jnp.ones((M_new,), bool)]),
+            Phi_L=linalg.chol_update_rank(self.Phi_L, W),
+            yF=self.yF + jnp.sum(jnp.einsum("mrb,mb->mr", F_new, yb_new), 0))
+
+    def retire(self, machine: int) -> "PICFStore":
+        api.check_machine_index(self.alive.shape[0], machine)
+        if not bool(self.alive[machine]):
+            return self
+        return dataclasses.replace(
+            self,
+            alive=self.alive.at[machine].set(False),
+            Phi_L=linalg.chol_update_rank(
+                self.Phi_L, self._scaled(self.F[machine]), sign=-1.0),
+            yF=self.yF - self.F[machine] @ self.yb[machine])
+
+    def revive(self, machine: int) -> "PICFStore":
+        api.check_machine_index(self.alive.shape[0], machine)
+        if bool(self.alive[machine]):
+            return self
+        return dataclasses.replace(
+            self,
+            alive=self.alive.at[machine].set(True),
+            Phi_L=linalg.chol_update_rank(
+                self.Phi_L, self._scaled(self.F[machine])),
+            yF=self.yF + self.F[machine] @ self.yb[machine])
+
+    def to_state(self) -> api.PICFState:
+        ydd = linalg.chol_solve(self.Phi_L, self.yF[:, None])[:, 0]  # eq. 22
+        if bool(self.alive.all()):
+            # streaming common case: pass the block arrays by reference
+            return api.PICFState(self.Xb, self.yb, self.F, self.Phi_L, ydd)
+        idx = jnp.asarray(np.flatnonzero(np.asarray(self.alive)))
+        return api.PICFState(self.Xb[idx], self.yb[idx], self.F[idx],
+                             self.Phi_L, ydd)
+
+
+def init_picf_store(kfn, params, X, y, *, rank: int,
+                    runner: Runner) -> PICFStore:
+    """``GPMethod.init_store`` for picf: distributed ICF + cached R-space
+    factors, cold-factorized once."""
+    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+    local = factor(kfn, params, X, rank, runner)            # (M, R, b)
+    s2 = cov.noise_var(params)
+    R = local.F.shape[1]
+    Phi = jnp.eye(R, dtype=local.F.dtype) \
+        + jnp.sum(jnp.einsum("mrb,msb->mrs", local.F, local.F), 0) / s2
+    Phi_L = linalg.chol(Phi, jitter=0.0)                    # eq. 21
+    yF = jnp.sum(jnp.einsum("mrb,mb->mr", local.F, yb), 0)  # eq. 19
+    alive = jnp.ones((runner.num_machines,), bool)
+    # pivots/Lp are replicated across machines: take machine 0's copy
+    return PICFStore(kfn, params, runner, Xb, yb, local.F,
+                     local.pivots[0], local.Lp[0], alive, Phi_L, yF)
+
+
+api.register(api.GPMethod("picf", fit, predict_batch, predict_batch_diag,
+                          init_store=init_picf_store))

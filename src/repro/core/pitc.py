@@ -205,6 +205,21 @@ def _pic_predict_routed_diag(kfn, params, state, U):
     return ppic.predict_routed_diag(kfn, params, state, U)
 
 
-api.register(api.GPMethod("pitc", fit, _pitc_predict, _pitc_predict_diag))
+def _pitc_init_store(kfn, params, X, y, *, S, M: int):
+    """Centralized PITC shares pPITC's StateStore (vmap-simulated blocks)."""
+    from repro.core import online
+    return online.init_pitc_store(kfn, params, X, y, S=S,
+                                  runner=VmapRunner(M=M))
+
+
+def _pic_init_store(kfn, params, X, y, *, S, M: int):
+    from repro.core import online
+    return online.init_pic_store(kfn, params, X, y, S=S,
+                                 runner=VmapRunner(M=M))
+
+
+api.register(api.GPMethod("pitc", fit, _pitc_predict, _pitc_predict_diag,
+                          init_store=_pitc_init_store))
 api.register(api.GPMethod("pic", fit_pic, _pic_predict, _pic_predict_diag,
-                          _pic_predict_routed_diag))
+                          _pic_predict_routed_diag,
+                          init_store=_pic_init_store))

@@ -32,7 +32,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import api, clustering
+from repro.core import api
 from repro.core import covariance as cov
 from repro.core import linalg
 from repro.core.gp import GPPosterior
@@ -92,26 +92,22 @@ def predict_from_summary(kfn, params, S, Kss_L, local: LocalSummary,
 # ---------------------------------------------------------------------------
 
 def fit(kfn, params, X, y, *, S, runner: Runner) -> api.PICState:
-    """Steps 1-3 over a Runner + per-block caches for eqs. (12)-(14)."""
-    Xb, yb = runner.shard_blocks(X), runner.shard_blocks(y)
+    """Steps 1-3 over a Runner + per-block caches for eqs. (12)-(14).
 
-    def fn(Xm, ym, params, S):
-        Kss_L = linalg.chol(kfn(params, S, S))
-        loc, (Ksd, C_L, Wy) = local_summary(kfn, params, S, Kss_L, Xm, ym)
-        beta = linalg.chol_solve(Kss_L, loc.ydot[:, None])[:, 0]
-        B = linalg.chol_solve(Kss_L, loc.Sdot)
-        return loc, Ksd, C_L, Wy, beta, B
+    ``online.PICStore`` is the fit-side producer (one code path for cold
+    fits and streamed states, mirroring ppitc.fit): a cold fit is just the
+    store's initial ``to_state``.
+    """
+    from repro.core import online
+    return online.init_pic_store(kfn, params, X, y, S=S,
+                                 runner=runner).to_state()
 
-    loc, Ksd, C_L, Wy, beta, B = runner.map(fn, (Xb, yb), (params, S))
-    Kss = kfn(params, S, S)
-    Kss_L = linalg.chol(Kss)
-    Sdd = Kss + jnp.sum(loc.Sdot, axis=0)              # eq. (6)
-    Sdd_L = linalg.chol(Sdd)
-    ydd = jnp.sum(loc.ydot, axis=0)                    # eq. (5)
-    alpha = linalg.chol_solve(Sdd_L, ydd[:, None])[:, 0]
-    return api.PICState(S, Kss_L, Sdd_L, alpha, Xb, yb, Ksd, C_L, Wy,
-                        loc.ydot, beta, B, loc.Sdot,
-                        clustering.block_centroids(Xb))
+
+def init_store(kfn, params, X, y, *, S, runner: Runner):
+    """``api.StateStore`` entry point (online.PICStore): streamed/retired
+    blocks keep emitting routed-servable PICStates with fresh centroids."""
+    from repro.core import online
+    return online.init_pic_store(kfn, params, X, y, S=S, runner=runner)
 
 
 def _block_posterior(kfn, params, state: api.PICState, Um, m_fields):
@@ -270,4 +266,4 @@ def predict_distributed(kfn, params, S, X, y, U,
 
 
 api.register(api.GPMethod("ppic", fit, predict_batch, predict_batch_diag,
-                          predict_routed_diag))
+                          predict_routed_diag, init_store=init_store))

@@ -203,4 +203,12 @@ def summaries(kfn, params, S, X, y, runner: Runner):
     return locals_, glob
 
 
-api.register(api.GPMethod("ppitc", fit, predict_batch, predict_batch_diag))
+def init_store(kfn, params, X, y, *, S, runner: Runner):
+    """``api.StateStore`` entry point: the same summaries ``fit`` builds,
+    kept mutable via the Sec. 5.2 algebra (online.PITCStore)."""
+    from repro.core import online
+    return online.init_pitc_store(kfn, params, X, y, S=S, runner=runner)
+
+
+api.register(api.GPMethod("ppitc", fit, predict_batch, predict_batch_diag,
+                          init_store=init_store))

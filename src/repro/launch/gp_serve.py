@@ -4,7 +4,7 @@ The paper's headline claim is that low-rank parallel GPs make *real-time*
 prediction possible. The serving-side realization (core/api.py architecture):
 
 * the expensive factors live in a cached ``PosteriorState`` (fit once, or
-  streamed via ``online.assimilate``);
+  streamed through an attached ``api.StateStore``);
 * incoming query points are queued and padded to a small set of bucket
   sizes, so ONE jitted ``predict_diag(params, state, U)`` call serves the
   whole microbatch with at most ``len(buckets)`` compilations ever;
@@ -21,10 +21,16 @@ prediction possible. The serving-side realization (core/api.py architecture):
   padding and serves them through the method's ``predict_routed_diag`` —
   each ticket's posterior is then invariant to what else arrived in the
   same microbatch (Remark 2; tests/test_routing_equivalence.py);
-* the state is hot-swappable: after ``online.assimilate``/``retire`` (or a
-  refit) the new state pytree has the same treedef/shapes, so
+* the state is hot-swappable: after an incremental-store update (or a
+  refit) the new state pytree usually has the same treedef/shapes, so
   ``swap_state`` changes the posterior under live traffic with zero
-  recompilation.
+  recompilation (a grown block axis costs exactly one recompile);
+* with an attached ``api.StateStore`` the server owns the full streaming
+  lifecycle: ``update(X_new, y_new)`` assimilates + hot-swaps,
+  ``retire_machine``/``revive_machine`` fold machines out/in, and
+  ``checkpoint``/``swap_from_checkpoint`` persist/restore the posterior
+  through ``core.serialize`` (versioned npz) — how a serving fleet
+  replicates state without re-reading data.
 
 Single-process by design — the concurrency story is the mesh underneath
 (ShardMapRunner fit) plus XLA async dispatch; what this layer owns is
@@ -42,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api
+from repro.core import api, clustering, serialize
 
 
 def default_buckets(max_batch: int, *, min_bucket: int = 8) -> tuple[int, ...]:
@@ -68,6 +74,7 @@ class ServeStats:
     n_batches: int = 0
     n_padded_rows: int = 0
     n_state_swaps: int = 0
+    n_updates: int = 0        # store-backed assimilate/retire/revive swaps
     n_evicted: int = 0
     # flush-trigger split: what actually drained the queue
     n_size_flushes: int = 0
@@ -98,8 +105,10 @@ class GPServer:
                  max_ready: int = 65536,
                  flush_deadline_ms: float | None = None,
                  routed: bool = False,
+                 store: api.StateStore | None = None,
                  clock: Callable[[], float] = time.monotonic):
         self.model = model
+        self.store = store
         self.max_batch = max_batch
         self.buckets = tuple(sorted(set(buckets or default_buckets(max_batch))))
         if self.buckets[-1] < max_batch:
@@ -191,8 +200,8 @@ class GPServer:
             # assignment on device, so this ordering affects locality only —
             # per-ticket posteriors are identical either way
             # (tests/test_routing_equivalence.py, bitwise).
-            cents = np.asarray(self.model.state.centroids)
-            a = ((U[:, None, :] - cents[None, :, :]) ** 2).sum(-1).argmin(1)
+            a = clustering.nearest_center_np(
+                U, np.asarray(self.model.state.centroids))
             order = np.argsort(a, kind="stable")
             queue = [queue[i] for i in order]
             U = U[order]
@@ -288,7 +297,70 @@ class GPServer:
             # fail at swap time, not mid-flush under live traffic
             raise ValueError(
                 f"routed server requires a state with block centroids; got "
-                f"{type(state).__name__} (online.to_state emits PITCState — "
-                f"refit the PIC-family state, or serve unrouted)")
+                f"{type(state).__name__} (a pPITC store emits PITCState — "
+                f"stream through a PIC-family store, or serve unrouted)")
         self.model = self.model.with_state(state)
         self.stats.n_state_swaps += 1
+
+    # -- incremental-store lifecycle (api.StateStore protocol) --------------
+
+    def _require_store(self, op: str) -> api.StateStore:
+        if self.store is None:
+            raise ValueError(
+                f"GPServer.{op} needs an attached StateStore — construct "
+                f"with GPServer(model, store=api.init_store(...)) or call "
+                f"attach_store")
+        return self.store
+
+    def attach_store(self, store: api.StateStore) -> None:
+        """Attach (or replace) the incremental store backing ``update``."""
+        self.store = store
+
+    def _commit(self, store: api.StateStore) -> None:
+        """Swap in a mutated store: pending tickets flush FIRST so every
+        ticket resolves against the posterior it was submitted under.
+        Atomic: ``swap_state`` (and its routed-centroid validation) runs
+        before ``self.store`` is reassigned, so a rejected state leaves the
+        server on the old store AND the old posterior — a retry won't fold
+        the same wave in twice."""
+        self.flush()
+        self.swap_state(store.to_state())
+        self.store = store
+        self.stats.n_updates += 1
+
+    def update(self, X_new, y_new) -> None:
+        """Assimilate a new data stream and hot-swap the posterior (Sec.
+        5.2): O(|S|²·b) store update, zero recompilation when the state
+        shapes are unchanged (pPITC) and exactly one recompile when the
+        block axis grows (pPIC/pICF)."""
+        self._commit(self._require_store("update").assimilate(X_new, y_new))
+
+    def retire_machine(self, machine: int) -> None:
+        """Fold a failed/decommissioned machine's contribution out and keep
+        serving the (exact) surviving posterior."""
+        self._commit(self._require_store("retire_machine").retire(machine))
+
+    def revive_machine(self, machine: int) -> None:
+        self._commit(self._require_store("revive_machine").revive(machine))
+
+    # -- checkpoint / restore ----------------------------------------------
+
+    def checkpoint(self, path) -> None:
+        """Persist the CURRENT serving state (core.serialize, versioned
+        npz). What a replica ships to its peers — states, not data."""
+        serialize.save_state(path, self.model.state)
+
+    def swap_from_checkpoint(self, path) -> None:
+        """Restore a checkpointed state and hot-swap it under live traffic
+        (pending tickets flush against the old state first). The routed
+        centroid check of ``swap_state`` applies — a PITC checkpoint cannot
+        be swapped into a routed server.
+
+        Any attached store is DETACHED: it describes the pre-restore
+        posterior, and a later ``update`` built on it would silently revert
+        the restored state. Re-attach a store consistent with the
+        checkpoint (``attach_store``) to resume streaming.
+        """
+        self.flush()
+        self.swap_state(serialize.load_state(path))
+        self.store = None

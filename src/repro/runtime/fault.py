@@ -8,7 +8,8 @@ work, and the result is *exactly* the PITC/PIC posterior of the surviving
 blocks (verified in tests/test_runtime.py).
 
 Recovery ladder implemented here:
-  1. degrade     — drop the lost block (alive-mask re-aggregation);
+  1. degrade     — drop the lost block (rank-b downdate of the cached
+                   global factor via ``StateStore.retire``);
   2. reassign    — a standby/surviving machine recomputes ONLY the lost
                    block's summary from the (replicated or re-readable) data
                    shard and folds it back in;
@@ -16,7 +17,9 @@ Recovery ladder implemented here:
                    every aggregation round, so a master loss replays the sum.
 
 The same logic covers elastic scale-down (retire = planned failure) and
-scale-up (assimilate new blocks online — Sec. 5.2).
+scale-up (assimilate new blocks online — Sec. 5.2). Built on the
+``api.StateStore`` protocol (``online.PITCStore``); the cluster only adds
+the block→machine assignment bookkeeping a scheduler needs.
 """
 from __future__ import annotations
 
@@ -25,45 +28,39 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import linalg, online
-from repro.core.ppitc import LocalSummary
+from repro.core import online
+from repro.core.ppitc import GlobalSummary
 from repro.parallel.runner import Runner
 
 
 class ClusterState(NamedTuple):
-    store: online.SummaryStore
+    store: online.PITCStore
     # block -> machine assignment (simulation bookkeeping)
     owner: jax.Array          # (n_blocks,) int32
 
 
 def build(kfn, params, S, X, y, runner: Runner) -> ClusterState:
-    store = online.build(kfn, params, S, X, y, runner)
-    M = store.alive.shape[0]
-    return ClusterState(store, jnp.arange(M, dtype=jnp.int32))
+    store = online.init_pitc_store(kfn, params, X, y, S=S, runner=runner)
+    return ClusterState(store, jnp.arange(store.num_machines,
+                                          dtype=jnp.int32))
 
 
 def fail(state: ClusterState, machine: int) -> ClusterState:
-    """Machine loss: mask its contribution. O(1), no recompute."""
-    return state._replace(store=online.retire(state.store, machine))
+    """Machine loss: fold its contribution out — one O(|S|² b) downdate of
+    the cached global factor, no recompute of survivors."""
+    return state._replace(store=state.store.retire(machine))
 
 
-def recover_degraded(state: ClusterState):
+def recover_degraded(state: ClusterState) -> GlobalSummary:
     """Posterior ingredients over surviving blocks only."""
-    return online.global_summary(state.store)
+    return state.store.global_summary()
 
 
-def recover_reassign(state: ClusterState, kfn, params, S, Xm, ym,
-                     machine: int, new_owner: int) -> ClusterState:
+def recover_reassign(state: ClusterState, Xm, ym, *, machine: int,
+                     new_owner: int) -> ClusterState:
     """Standby machine recomputes ONLY the lost block's summary (the paper's
-    Step 2 for one block) and folds it back in."""
-    Kss_L = linalg.chol(kfn(params, S, S))
-    from repro.core.ppitc import local_summary
-    loc, _ = local_summary(kfn, params, S, Kss_L, Xm, ym)
-    locs = state.store.locals_
-    locs = LocalSummary(locs.ydot.at[machine].set(loc.ydot),
-                        locs.Sdot.at[machine].set(loc.Sdot))
-    store = online.SummaryStore(locs,
-                                state.store.alive.at[machine].set(True),
-                                state.store.Kss)
+    Step 2 for one block) and folds it back in. The store owns the fit
+    context (kernel/params/S), so recovery needs just the re-read shard."""
+    store = state.store.reassign(machine, Xm, ym)
     owner = state.owner.at[machine].set(new_owner)
     return ClusterState(store, owner)

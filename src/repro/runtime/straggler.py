@@ -8,6 +8,10 @@ and the stragglers fold in later as an online update (Sec. 5.2 algebra).
 
 ``simulate`` quantifies the accuracy/latency trade-off: per-machine latency
 draws -> deadline sweep -> (fraction of blocks included, posterior RMSE).
+Operates on the ``api.StateStore`` protocol (``online.PITCStore``): a
+deadline view is ``store.with_alive(arrived_mask)`` — many machines flip at
+once, so the store re-derives its cached factor in one pass instead of a
+chain of rank updates.
 """
 from __future__ import annotations
 
@@ -38,23 +42,21 @@ def sample_latencies(key, M: int, *, base: float = 1.0,
                      (1 + jax.random.uniform(k3, (M,))), lat)
 
 
-def aggregate_with_deadline(store: online.SummaryStore, latencies,
-                            deadline: float, kfn, params, S, U
-                            ) -> DeadlineResult:
+def aggregate_with_deadline(store: online.PITCStore, latencies,
+                            deadline: float, U) -> DeadlineResult:
     included = (latencies <= deadline) & store.alive
-    partial = store._replace(alive=included)
-    mean, cov = online.predict_ppitc(partial, kfn, params, S, U)
+    mean, cov = store.with_alive(included).predict(U)
     return DeadlineResult(deadline, included,
                           jnp.mean(included.astype(jnp.float32)), mean,
                           jnp.diag(cov))
 
 
-def simulate(key, store, kfn, params, S, U, y_true, deadlines):
+def simulate(key, store: online.PITCStore, U, y_true, deadlines):
     """RMSE + inclusion fraction per deadline (benchmarks/bench_fault.py)."""
-    lat = sample_latencies(key, store.alive.shape[0])
+    lat = sample_latencies(key, store.num_machines)
     rows = []
     for d in deadlines:
-        r = aggregate_with_deadline(store, lat, d, kfn, params, S, U)
+        r = aggregate_with_deadline(store, lat, d, U)
         rmse = jnp.sqrt(jnp.mean((r.mean - y_true) ** 2))
         rows.append({"deadline": float(d), "fraction": float(r.fraction),
                      "rmse": float(rmse)})

@@ -24,8 +24,7 @@ class TestFault:
         cl, _ = _cluster(p)
         cl = fault.fail(cl, 2)
         glob = fault.recover_degraded(cl)
-        mean, _ = online.predict_ppitc(cl.store, p["kfn"], p["params"],
-                                       p["S"], p["U"])
+        mean, _ = cl.store.predict(p["U"])
         b = p["X"].shape[0] // p["M"]
         keep = jnp.concatenate([jnp.arange(0, 2 * b),
                                 jnp.arange(3 * b, 4 * b)])
@@ -38,13 +37,12 @@ class TestFault:
         """Fail then recompute only the lost block: exact original result."""
         p = make_problem()
         cl, r = _cluster(p)
-        g0 = online.global_summary(cl.store)
+        g0 = cl.store.global_summary()
         cl = fault.fail(cl, 1)
         b = p["X"].shape[0] // p["M"]
         Xm, ym = p["X"][b:2 * b], p["y"][b:2 * b]
-        cl = fault.recover_reassign(cl, p["kfn"], p["params"], p["S"],
-                                    Xm, ym, machine=1, new_owner=3)
-        g1 = online.global_summary(cl.store)
+        cl = fault.recover_reassign(cl, Xm, ym, machine=1, new_owner=3)
+        g1 = cl.store.global_summary()
         np.testing.assert_allclose(g0.Sdd, g1.Sdd, atol=1e-9)
         np.testing.assert_allclose(g0.ydd, g1.ydd, atol=1e-9)
 
@@ -53,8 +51,7 @@ class TestFault:
         cl, _ = _cluster(p)
         for m in (0, 3):
             cl = fault.fail(cl, m)
-        mean, var = online.predict_ppitc(cl.store, p["kfn"], p["params"],
-                                         p["S"], p["U"])
+        mean, var = cl.store.predict(p["U"])
         assert bool(jnp.isfinite(mean).all())
         assert bool((jnp.diag(var) > 0).all())
 
@@ -67,11 +64,9 @@ class TestStraggler:
         cl, _ = _cluster(p)
         lat = straggler.sample_latencies(KEY, p["M"])
         r_short = straggler.aggregate_with_deadline(
-            cl.store, lat, float(jnp.min(lat)), p["kfn"], p["params"],
-            p["S"], p["U"])
+            cl.store, lat, float(jnp.min(lat)), p["U"])
         r_full = straggler.aggregate_with_deadline(
-            cl.store, lat, float(jnp.max(lat)) + 1, p["kfn"], p["params"],
-            p["S"], p["U"])
+            cl.store, lat, float(jnp.max(lat)) + 1, p["U"])
         assert float(r_short.fraction) <= float(r_full.fraction)
         assert float(r_full.fraction) == 1.0
         full = pitc.pitc_predict_literal(p["kfn"], p["params"], p["S"],
@@ -83,8 +78,7 @@ class TestStraggler:
         cl, _ = _cluster(p)
         lat = straggler.sample_latencies(KEY, p["M"], straggle_p=0.5)
         r = straggler.aggregate_with_deadline(
-            cl.store, lat, float(jnp.median(lat)), p["kfn"], p["params"],
-            p["S"], p["U"])
+            cl.store, lat, float(jnp.median(lat)), p["U"])
         assert bool(jnp.isfinite(r.mean).all())
         assert bool((r.var > 0).all())
 

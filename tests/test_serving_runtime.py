@@ -97,8 +97,7 @@ class TestFailureDetector:
         det.heartbeat(0); det.heartbeat(2); det.heartbeat(3)
         for m in det.sweep():
             cl = fault.fail(cl, m)
-        mean, _ = online.predict_ppitc(cl.store, p["kfn"], p["params"],
-                                       p["S"], p["U"])
+        mean, _ = cl.store.predict(p["U"])
         assert bool(jnp.isfinite(mean).all())
 
 
