@@ -73,6 +73,43 @@ def run(quick: bool = False):
                     f"tile_bytes={tile_bytes};"
                     f"ai_flops_per_byte={flops / tile_bytes:.1f}")
 
+    # --- fused serving kernel xcov_diag: covariance tile + cached solves +
+    # variance reduction in one pass (the ppitc/pitc/fgp diag hot path).
+    # Tile sizes are picked FROM SERVING SHAPES (pick_serve_block_q over the
+    # bucket ladder), and the derived column carries the per-dispatch HBM
+    # model: the compose path round-trips the (u, s) covariance and both
+    # solve outputs through HBM (~5·u·s extra floats); fused keeps them in
+    # VMEM. Correctness vs the ref compose oracle is asserted here too.
+    from repro.kernels.rbf import ref as rbf_ref
+    from repro.kernels.rbf.ops import pick_serve_block_q
+    ks2 = jax.random.split(jax.random.PRNGKey(7), 3)
+    Ssup = jax.random.normal(ks2[0], (s_size, d_serve), jnp.float32)
+    A1 = jax.random.normal(ks2[1], (s_size, s_size), jnp.float32)
+    A2 = jax.random.normal(ks2[2], (s_size, s_size), jnp.float32)
+    L1 = jnp.linalg.cholesky(A1 @ A1.T + s_size * jnp.eye(s_size))
+    L2 = jnp.linalg.cholesky(A2 @ A2.T + 2 * s_size * jnp.eye(s_size))
+    alpha = jax.random.normal(ks2[0], (s_size,), jnp.float32)
+    for uq in ((64,) if quick else (8, 64, 256)):
+        Uq = jax.random.normal(ks2[1], (uq, d_serve), jnp.float32)
+        t_ref = common.timeit(jax.jit(
+            lambda Uq=Uq: rbf_ref.xcov_diag(Uq, Ssup, L1, alpha, 1.3, L2)[0]))
+        m_r, v_r = rbf_ref.xcov_diag(Uq, Ssup, L1, alpha, 1.3, L2)
+        m_p, v_p = rbf_ops.xcov_diag(Uq, Ssup, L1, alpha, 1.3, L2,
+                                     impl="pallas_interpret")
+        assert jnp.allclose(m_p, m_r, rtol=1e-5, atol=1e-5), \
+            float(jnp.abs(m_p - m_r).max())
+        assert jnp.allclose(v_p, v_r, rtol=1e-5, atol=1e-5), \
+            float(jnp.abs(v_p - v_r).max())
+        t_pal = common.timeit(lambda: rbf_ops.xcov_diag(
+            Uq, Ssup, L1, alpha, 1.3, L2, impl="pallas_interpret")[0])
+        bq = pick_serve_block_q(uq)
+        hbm_fused = common.xcov_hbm_bytes(uq, s_size, d_serve, fused=True)
+        hbm_compose = common.xcov_hbm_bytes(uq, s_size, d_serve, fused=False)
+        common.emit(f"kernel/xcov_diag/u{uq}", t_ref,
+                    f"pallas_interpret_us={t_pal:.0f};block_q={bq};"
+                    f"hbm_fused={hbm_fused};hbm_compose={hbm_compose};"
+                    f"hbm_saving={hbm_compose / hbm_fused:.2f}x")
+
     B, H, T, D = 1, 8, 1024, 128
     q = jax.random.normal(key, (B, H, T, D), jnp.float32)
     k = jax.random.normal(key, (B, H, T, D), jnp.float32)

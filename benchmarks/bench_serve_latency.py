@@ -1,6 +1,7 @@
 """Real-time serving: cold one-shot prediction vs amortized cached-state
-prediction vs batch size, plus the routed/deadline serving path
-(core/api.py + launch/gp_serve.py).
+prediction vs batch size, the kernel-implementation sweep (dense se_ard vs
+se_ard_pallas cross-covariance vs the fused xcov_diag serving kernel), and
+the routed/deadline serving path (core/api.py + launch/gp_serve.py).
 
 What the paper's real-time claim cashes out to in this codebase:
 
@@ -23,10 +24,23 @@ loudly on a regression):
 * amortized repeated-query prediction >= 5x faster than the cold path at
   n=4096, M=8 (full size only), posteriors allclose to the legacy path;
 * the deadline flusher's p99 ticket latency beats the size-only trigger at
-  low arrival rates (every size).
+  low arrival rates (every size);
+* the fused xcov_diag path beats the dense se_ard serving path — on
+  wall-clock (p50/p99 asserted not-worse) when a real accelerator backs the
+  Pallas kernel, on the per-dispatch HBM/arithmetic-intensity model on
+  CPU-only CI (interpret mode executes the kernel body in Python, so its
+  wall time means nothing);
+* the two-bucket routed scatter pads >= 2x fewer rows than the capacity-|U|
+  layout at M=8 balanced traffic (deterministic, asserted everywhere); its
+  p50/p99 ticket latency is asserted not-worse on accelerators only — the
+  scheme trades (M+G)·cap computed rows for M+G dispatched programs, and
+  XLA-CPU's batched triangular solve bills per PROGRAM almost independently
+  of the RHS width, so the row saving only cashes out where the solve is
+  column-scaled (TPU/GPU). Both latencies are emitted either way.
 """
 from __future__ import annotations
 
+import dataclasses
 import gc
 import time
 from functools import partial
@@ -38,13 +52,73 @@ import numpy as np
 from repro.core import api, covariance as cov, ppic, ppitc, support
 from repro.data import synthetic
 from repro.launch.gp_serve import GPServer
-from repro.parallel.runner import VmapRunner
+from repro.parallel.runner import (ShardMapRunner, VmapRunner,
+                                   routed_capacity)
 
 from benchmarks import common
 
 N, M, S_SIZE = 4096, 8, 128
 BATCHES = (1, 8, 64, 256)
 SPEEDUP_GATE = 5.0
+P99_SLACK = 1.25      # wall-clock not-worse gates tolerate CPU timer noise
+
+
+def run_impl_sweep(kfn, params, state, X_test, batches, tag: str):
+    """dense se_ard vs se_ard_pallas xcov-only vs fused xcov_diag over the
+    serving batch ladder, on one fitted state (VmapRunner / ShardMapRunner
+    produce bitwise-identical states, so ``tag`` names the fit backend)."""
+    on_tpu = jax.default_backend() == "tpu"
+    pallas_impl = "pallas" if on_tpu else "pallas_interpret"
+    spec_xcov = cov.make_spec("se", impl=pallas_impl, fused=False)
+    spec_fused = cov.make_spec("se", impl=pallas_impl, fused=True)
+    s = state.S.shape[0]
+    d = X_test.shape[1]
+    for u in batches:
+        Uq = X_test[:u]
+        fns = {
+            "dense": jax.jit(lambda Uq=Uq: ppitc.predict_batch_diag(
+                kfn, params, state, Uq)),
+            "xcov": jax.jit(lambda Uq=Uq: ppitc.predict_batch_diag(
+                spec_xcov, params, state, Uq)),
+            "fused": jax.jit(lambda Uq=Uq: ppitc.predict_batch_diag(
+                spec_fused, params, state, Uq)),
+        }
+        ref_m, ref_v = fns["dense"]()
+        lat = {}
+        for name, fn in fns.items():
+            m, v = fn()
+            assert jnp.allclose(m, ref_m, rtol=1e-4, atol=1e-5), \
+                (tag, name, u, float(jnp.abs(m - ref_m).max()))
+            assert jnp.allclose(v, ref_v, rtol=1e-3, atol=1e-5), \
+                (tag, name, u, float(jnp.abs(v - ref_v).max()))
+            samples = [common.timeit(lambda fn=fn: fn()[0], repeats=1,
+                                     warmup=0) for _ in range(7)]
+            lat[name] = {"p50": float(np.percentile(samples, 50)),
+                         "p99": float(np.percentile(samples, 99))}
+        hbm_d = common.xcov_hbm_bytes(u, s, d, fused=False)
+        hbm_f = common.xcov_hbm_bytes(u, s, d, fused=True)
+        common.emit(
+            f"serve/xcov_sweep_{tag}/u{u}", lat["dense"]["p50"],
+            f"xcov_p50={lat['xcov']['p50']:.0f};"
+            f"fused_p50={lat['fused']['p50']:.0f};"
+            f"fused_p99={lat['fused']['p99']:.0f};"
+            f"dense_p99={lat['dense']['p99']:.0f};"
+            f"hbm_dense={hbm_d};hbm_fused={hbm_f};"
+            f"hbm_saving={hbm_d / hbm_f:.2f}x")
+        # the falsifiable acceptance gate — fused beats dense on wall-clock
+        # (p50/p99) — arms on a real accelerator. On CPU the Pallas body is
+        # Python-interpreted, so wall-clock means nothing; the emitted
+        # hbm_* model columns carry the claim there (they are a model of
+        # the same kernel both backends run, not a measurable gate —
+        # asserting model < model+const would be a tautology).
+        if on_tpu:
+            for q in ("p50", "p99"):
+                assert lat["fused"][q] <= lat["dense"][q] * P99_SLACK, \
+                    f"{tag} u={u}: fused {q} {lat['fused'][q]:.0f}us worse " \
+                    f"than dense {lat['dense'][q]:.0f}us on TPU"
+    common.metric(f"xcov_hbm_saving_{tag}",
+                  common.xcov_hbm_bytes(batches[-1], s, d, fused=False)
+                  / common.xcov_hbm_bytes(batches[-1], s, d, fused=True))
 
 
 def ticket_latency_ms(model, U, *, n_req: int, interarrival_ms: float,
@@ -173,6 +247,14 @@ def run(quick: bool = False, smoke: bool = False):
         common.emit(f"serve/batch{u}/n{n}", t,
                     f"per_query_us={t / u:.1f}")
 
+    # --- kernel-impl sweep: dense vs pallas xcov vs fused, both runners ----
+    run_impl_sweep(kfn, params, state, ds.X_test, batches, "vmap")
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    sm_runner = ShardMapRunner(mesh=mesh, axis_name="data")
+    if n % sm_runner.num_machines == 0:
+        state_sm = ppitc.fit(kfn, params, ds.X, ds.y, S=S, runner=sm_runner)
+        run_impl_sweep(kfn, params, state_sm, ds.X_test, batches, "shardmap")
+
     # --- routed pPIC serving: composition-invariant, centroid-dispatched ---
     pic_state = ppic.fit(kfn, params, ds.X, ds.y, S=S, runner=runner)
     pic_model = api.FittedGP(api.get("ppic"), kfn, params, pic_state)
@@ -196,6 +278,29 @@ def run(quick: bool = False, smoke: bool = False):
     m_p, _ = ppic.predict_routed_diag(kfn, params, pic_state, Ur[perm])
     np.testing.assert_array_equal(np.asarray(m_p), np.asarray(ref_m)[perm])
 
+    # --- two-bucket routed scatter vs the capacity-|U| layout --------------
+    # padded-rows reduction is deterministic: (M + G)·cap vs M·|U| computed
+    # rows for the same batch (the >= 2x gate at M=8 balanced traffic)
+    cap, G = routed_capacity(u_r, M)
+    rows_two = (M + G) * cap
+    rows_full = M * u_r
+    common.metric("routed_padded_rows_ratio", rows_full / rows_two)
+    common.emit(f"serve/routed_two_bucket/u{u_r}", 0.0,
+                f"rows_two_bucket={rows_two};rows_capacity={rows_full};"
+                f"reduction={rows_full / rows_two:.2f}x")
+    assert rows_full / rows_two >= 2.0, \
+        f"two-bucket scatter reduces padded rows only " \
+        f"{rows_full / rows_two:.2f}x at M={M}"
+    # posterior equality (bitwise) + wall-clock not-worse on the direct call
+    cap_m, cap_v = ppic.predict_routed_diag_capacity(kfn, params, pic_state,
+                                                     Ur)
+    np.testing.assert_array_equal(np.asarray(ref_m), np.asarray(cap_m))
+    np.testing.assert_array_equal(np.asarray(ref_v), np.asarray(cap_v))
+    cap_fn = jax.jit(partial(ppic.predict_routed_diag_capacity, kfn))
+    t_cap = common.timeit(lambda: cap_fn(params, pic_state, Ur)[0])
+    common.emit(f"serve/routed_capacity{u_r}/n{n}", t_cap,
+                f"two_bucket_us={t_routed:.1f}")
+
     # --- deadline flusher vs size-only trigger: p50/p99 at low arrival rate
     # max_batch=64 + 2ms interarrival: the size trigger alone would hold the
     # oldest ticket ~126ms; a 20ms deadline caps that regardless of traffic
@@ -213,6 +318,32 @@ def run(quick: bool = False, smoke: bool = False):
     assert lat_dead["p99"] < lat_size["p99"], \
         (f"deadline flusher p99 {lat_dead['p99']:.1f}ms not below size-only "
          f"trigger p99 {lat_size['p99']:.1f}ms at low arrival rate")
+
+    # --- two-bucket vs capacity-|U| under the same deadline traffic --------
+    # same simulated arrivals against a server whose routed predict runs the
+    # old capacity layout. The wall-clock not-worse gate applies on real
+    # accelerators only: XLA-CPU's batched triangular solve bills per
+    # dispatched program (M+G for two-bucket vs M) almost independently of
+    # the RHS width, so the ~(alpha+1)/M row reduction — asserted
+    # deterministically above — does not cash out on CPU wall-clock.
+    cap_method = dataclasses.replace(
+        api.get("ppic"),
+        predict_routed_diag=lambda k, p, s, U, tile=None:
+            ppic.predict_routed_diag_capacity(k, p, s, U))
+    cap_model = api.FittedGP(cap_method, kfn, params, pic_state)
+    lat_cap = ticket_latency_ms(cap_model, Ur, deadline_ms=20.0, **sim)
+    common.emit(f"serve/p99_capacity_layout/n{n}", lat_cap["p99"] * 1e3,
+                f"p50_ms={lat_cap['p50']:.1f};p99_ms={lat_cap['p99']:.1f}")
+    for trig, lat in (("capacity20", lat_cap),):
+        common.metric(f"serve_p50_ms_{trig}", lat["p50"])
+        common.metric(f"serve_p99_ms_{trig}", lat["p99"])
+    if jax.default_backend() == "tpu":
+        assert lat_dead["p50"] <= lat_cap["p50"] * P99_SLACK, \
+            (f"two-bucket routed p50 {lat_dead['p50']:.1f}ms worse than "
+             f"capacity layout {lat_cap['p50']:.1f}ms")
+        assert lat_dead["p99"] <= lat_cap["p99"] * P99_SLACK, \
+            (f"two-bucket routed p99 {lat_dead['p99']:.1f}ms worse than "
+             f"capacity layout {lat_cap['p99']:.1f}ms")
 
     return speedup
 

@@ -60,6 +60,28 @@ def modeled_parallel_us(total_us: float, M: int, summary_bytes: float) -> float:
     return total_us / M + comm_model_us(summary_bytes, M)
 
 
+def xcov_hbm_bytes(u: int, s: int, d: int, *, fused: bool,
+                   itemsize: int = 4) -> int:
+    """Per-dispatch HBM traffic model of the S-space diag predict (shared by
+    bench_kernels and bench_serve_latency so the two hbm_saving columns
+    cannot drift).
+
+    Both paths read the queries, support set, two (s, s) factors and alpha,
+    and write the two (u,) outputs. The compose path additionally writes the
+    (u, s) cross-covariance and streams it back through the two triangular
+    solves (~5·u·s floats after generous fusion credit); the fused kernel
+    keeps all of that VMEM-resident. Feature/support dims use the kernel's
+    padded (lane-aligned) sizes so the model matches what a TPU would move.
+    This is a MODEL, not a measurement — it quantifies the claim on CPU CI
+    where interpret-mode wall-clock is meaningless; the falsifiable gate
+    (fused p50/p99 <= dense) arms on real accelerators."""
+    d_pad = -(-d // 128) * 128
+    s_pad = -(-s // 128) * 128
+    base = (u * d_pad + s_pad * d_pad + 2 * s_pad * s_pad + s_pad
+            + 2 * u) * itemsize
+    return base if fused else base + 5 * u * s_pad * itemsize
+
+
 def emit(name: str, us: float, derived: str = "") -> None:
     ROWS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}")

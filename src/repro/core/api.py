@@ -159,7 +159,10 @@ class GPMethod:
     serving path: each query is assigned to its nearest-centroid block
     (Remark 2) instead of positionally, so a query's (mean, var) depends only
     on the query point and the fitted state — never on what else happened to
-    arrive in the same microbatch. Methods whose posterior is already
+    arrive in the same microbatch. Implementations accept an optional
+    ``tile=`` keyword (serving-kernel query-tile size) that the routed
+    scatter aligns its bucket widths to; ``GPServer(routed=True)`` threads
+    its ``block_q`` through it. Methods whose posterior is already
     query-independent of the block layout (fgp/pitc/ppitc/picf) leave it
     ``None``: ``FittedGP.predict_routed_diag`` raises for them and
     ``GPServer(routed=True)`` rejects them at construction — their

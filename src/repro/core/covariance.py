@@ -12,9 +12,20 @@ Params are stored in log-space for unconstrained MLE (core/hyper.py):
 The squared-exponential path can route through the Pallas TPU kernel
 (kernels/rbf) when ``impl="pallas"`` — the fused pairwise-distance+exp tiling is
 the dominant FLOP producer of local-summary construction.
+
+``KernelSpec`` is the serving-side kernel abstraction: a callable drop-in for
+any bare ``KernelFn`` that additionally DECLARES how cross-covariances should
+be built (dense jnp vs the fused Pallas tiling) and whether the predict paths
+may collapse covariance + cached solves + variance reduction into the fused
+``xcov_diag`` serving kernel (kernels/rbf/xcov.py). Every registered predict
+path accepts a spec wherever it accepts a kernel function — the spec routes
+``k(params, X1, X2)`` through its declared implementation transparently, so
+``ppic``/``picf``/``fgp`` cross-covariance assembly moves onto the Pallas hot
+path without touching their math.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
 from typing import Callable
@@ -96,8 +107,98 @@ def make_kernel(name: str) -> KernelFn:
         raise ValueError(f"unknown kernel {name!r}; have {sorted(KERNELS)}")
 
 
+# ---------------------------------------------------------------------------
+# KernelSpec — the serving-side kernel abstraction (hot-path declaration).
+# ---------------------------------------------------------------------------
+
+_SE_FAMILY = ("se", "se_pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """A kernel plus its declared cross-covariance/serving implementation.
+
+    Callable with the ``KernelFn`` signature, so it drops into every fit and
+    predict path unchanged. What it adds over a bare function:
+
+    * ``impl`` — how cross-covariances are assembled: ``"auto"`` (Pallas on
+      TPU, dense jnp elsewhere), ``"pallas"`` (compiled kernel),
+      ``"pallas_interpret"`` (Python-executed kernel body, for validation on
+      CPU), ``"jnp"`` (always dense). Only the SE family has a Pallas
+      realization; other kernels fall through to their dense fn.
+    * ``fused`` — allow predict paths with S-space cached factors (ppitc /
+      pitc eqs. 7-8, fgp eqs. 1-2) to dispatch the fused ``xcov_diag``
+      serving kernel: covariance tile + cached triangular solve + variance
+      quadratic form in one VMEM-resident pass (kernels/rbf/xcov.py).
+      Honoured only when ``impl`` resolves to a Pallas mode and the cached
+      factor fits the kernel's VMEM residency cap.
+    * ``block_q`` — serving tile override; also consumed by the two-bucket
+      routed scatter (ppic.predict_routed_diag) and ``default_buckets`` so
+      microbatch padding lands on kernel tile boundaries.
+
+    Frozen/hashable: safe to close over in jitted serving functions.
+    """
+    name: str = "se"
+    impl: str = "auto"
+    fused: bool = True
+    block_q: int | None = None
+
+    @property
+    def kfn(self) -> KernelFn:
+        return make_kernel(self.name)
+
+    def resolved_impl(self) -> str:
+        if self.impl == "auto":
+            return "pallas" if jax.default_backend() == "tpu" else "jnp"
+        return self.impl
+
+    def __call__(self, params: dict, X1: jax.Array, X2: jax.Array):
+        impl = self.resolved_impl()
+        if self.name not in _SE_FAMILY or impl == "jnp":
+            # dense path in the native dtype (float64 equivalence tests)
+            return (se_ard if self.name in _SE_FAMILY else self.kfn)(
+                params, X1, X2)
+        from repro.kernels.rbf import ops as rbf_ops
+        return rbf_ops.rbf_covariance(
+            _scale(params, X1), _scale(params, X2), signal_var(params),
+            impl=impl)
+
+    def diag(self, params: dict, X: jax.Array) -> jax.Array:
+        """diag k(X, X) — constant sig2 for the stationary kernels this
+        registry carries (no per-row kernel dispatch)."""
+        return jnp.full((X.shape[0],), signal_var(params), X.dtype)
+
+    def fuse(self, k: int) -> bool:
+        """May the S-space diag predict collapse into ``xcov_diag`` for a
+        cached factor of size k? (Pallas impl + VMEM-resident factor.)"""
+        from repro.kernels.rbf import ops as rbf_ops
+        return (self.fused and self.name in _SE_FAMILY
+                and self.resolved_impl() in ("pallas", "pallas_interpret")
+                and -(-k // 128) * 128 <= rbf_ops.MAX_FUSED_RESIDENT)
+
+    def fused_diag(self, params: dict, U: jax.Array, Xk: jax.Array,
+                   L1: jax.Array, alpha: jax.Array,
+                   L2: jax.Array | None = None):
+        """Dispatch the fused serving kernel: (mean, var) with
+        var = sig2 - q(L1) [+ q(L2)] over lengthscale-scaled inputs."""
+        from repro.kernels.rbf import ops as rbf_ops
+        return rbf_ops.xcov_diag(
+            _scale(params, U), _scale(params, Xk), L1, alpha,
+            signal_var(params), L2, impl=self.resolved_impl(),
+            block_q=self.block_q)
+
+
+def make_spec(name: str = "se", *, impl: str = "auto", fused: bool = True,
+              block_q: int | None = None) -> KernelSpec:
+    """Front door for the serving kernel-spec knob (README "Performance")."""
+    make_kernel(name)            # validate eagerly
+    return KernelSpec(name, impl, fused, block_q)
+
+
 def kdiag(kfn: KernelFn, params: dict, X: jax.Array) -> jax.Array:
     """diag k(X, X) without forming the matrix (O(n·d))."""
+    if isinstance(kfn, KernelSpec):
+        return kfn.diag(params, X)
     return jax.vmap(lambda x: kfn(params, x[None], x[None])[0, 0])(X)
 
 

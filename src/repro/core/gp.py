@@ -50,7 +50,13 @@ def predict_batch(kfn: cov.KernelFn, params: dict, state: api.FGPState,
 
 
 def predict_batch_diag(kfn, params, state: api.FGPState, X_test):
-    """(mean, var) vectors — no |U|x|U| intermediates (serving hot path)."""
+    """(mean, var) vectors — no |U|x|U| intermediates (serving hot path).
+
+    With a Pallas ``cov.KernelSpec`` and a VMEM-resident training factor
+    (|D| within the fused residency cap) this is one ``xcov_diag`` dispatch:
+    FGP is the L2-less case of the fused serving kernel (var = sig2 - q(L))."""
+    if isinstance(kfn, cov.KernelSpec) and kfn.fuse(state.X.shape[0]):
+        return kfn.fused_diag(params, X_test, state.X, state.L, state.alpha)
     K_ud = kfn(params, X_test, state.X)
     mean = K_ud @ state.alpha
     V = linalg.tri_solve(state.L, K_ud.T)

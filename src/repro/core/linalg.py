@@ -38,6 +38,23 @@ def chol_solve(L: jax.Array, B: jax.Array) -> jax.Array:
     return jax.scipy.linalg.cho_solve((L, True), B)
 
 
+def chol_solve_right(L: jax.Array, A: jax.Array) -> jax.Array:
+    """Solve X (L Lᵀ) = A given lower Cholesky L — i.e. A (L Lᵀ)⁻¹ with A's
+    ROWS as the batch axis (= ``chol_solve(L, A.T).T`` mathematically).
+
+    Exists for bitwise row-stability, not speed: serving paths that must be
+    batch-composition-invariant bit-for-bit (ppic routed prediction) keep
+    the query axis on matrix rows everywhere, because XLA's *batched*
+    left-sided triangular solve (and gemms with queries on the column axis)
+    pick panel strategies that make a column's float path depend on its
+    position and on the total width — row-sided solves and row-major gemms
+    do not (tests/test_routing_equivalence.py)."""
+    t = jax.lax.linalg.triangular_solve(L, A, left_side=False, lower=True,
+                                        transpose_a=True)    # X Lᵀ = A
+    return jax.lax.linalg.triangular_solve(L, t, left_side=False, lower=True,
+                                           transpose_a=False)  # X L = t
+
+
 def psd_solve(K: jax.Array, B: jax.Array, jitter: float | None = None) -> jax.Array:
     """Solve K X = B for PSD K via jittered Cholesky."""
     return chol_solve(chol(K, jitter), B)

@@ -184,13 +184,51 @@ def revive(store: SummaryStore, machine: int) -> SummaryStore:
                           ydd=store.ydd + store.locals_.ydot[machine])
 
 
-def with_alive(store: SummaryStore, alive: jax.Array) -> SummaryStore:
+def with_alive(store: SummaryStore, alive: jax.Array, *,
+               mode: str = "auto") -> SummaryStore:
     """Arbitrary alive-mask view (straggler deadlines flip many machines at
-    once): re-derives the cached factors from the mask in one O(|S|³) pass —
-    cheaper than a chain of updates when most of the mask changed, and the
-    one sanctioned way to set ``alive`` wholesale (a raw ``_replace`` would
-    desynchronize the cache)."""
+    once) — the one sanctioned way to set ``alive`` wholesale (a raw
+    ``_replace`` would desynchronize the cache). Two realizations:
+
+    * ``incremental`` — one rank-b cholupdate/downdate per FLIPPED machine
+      (retire/revive chain): O(|S|²·b·h) for Hamming distance h, so a small
+      deadline flip costs O(|S|²·b) — no |S|³ anywhere;
+    * ``refold``      — re-derive the factors from the masked summary sum in
+      one O(|S|³) pass (the cold-factorization float path).
+
+    ``mode="auto"`` picks by the Hamming distance of the mask against the
+    cost crossover: h·b rank-1 sweeps at O(|S|²) each versus the refold's
+    O(|S|³)/3 factorization plus the O(M·|S|²) masked re-sum — incremental
+    wins while h·b <= |S|/3 + M. Both paths produce the same matrix; they
+    differ only in float path (rank-update roundoff ~1e-13 in float64,
+    tests/test_state_store.py).
+    """
     alive = jnp.asarray(alive, bool)
+    if mode not in ("auto", "incremental", "refold"):
+        raise ValueError(f"unknown with_alive mode {mode!r}")
+    if isinstance(alive, jax.core.Tracer) or \
+            isinstance(store.alive, jax.core.Tracer):
+        # under jit/vmap the Hamming distance is data we cannot branch on
+        # host-side; the refold is the pure-jnp realization and traces fine
+        if mode == "incremental":
+            raise ValueError(
+                "with_alive(mode='incremental') needs concrete masks (it "
+                "dispatches a host-side retire/revive chain); under "
+                "jit/vmap use mode='auto'/'refold'")
+        mode = "refold"
+    if mode != "refold":
+        flips = np.flatnonzero(np.asarray(store.alive) != np.asarray(alive))
+        if mode == "auto":
+            s = store.Sdd_L.shape[0]
+            b = store.F.shape[-1]
+            M = store.alive.shape[0]
+            mode = ("incremental" if len(flips) * b <= s // 3 + M
+                    else "refold")
+    if mode == "incremental":
+        for m in flips:
+            m = int(m)
+            store = revive(store, m) if bool(alive[m]) else retire(store, m)
+        return store
     store = store._replace(alive=alive)
     glob = global_summary(store)
     return store._replace(Sdd_L=_sdd_chol(store.Kss, glob.Sdd),
@@ -275,8 +313,9 @@ class PITCStore:
     def num_machines(self) -> int:
         return int(self.store.alive.shape[0])
 
-    def with_alive(self, alive) -> "PITCStore":
-        return dataclasses.replace(self, store=with_alive(self.store, alive))
+    def with_alive(self, alive, *, mode: str = "auto") -> "PITCStore":
+        return dataclasses.replace(self, store=with_alive(self.store, alive,
+                                                          mode=mode))
 
     def reassign(self, machine: int, Xm, ym) -> "PITCStore":
         return dataclasses.replace(self, store=replace_block(

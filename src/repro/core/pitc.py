@@ -200,9 +200,9 @@ def _pic_predict_diag(kfn, params, state, U):
     return ppic.predict_batch_diag(kfn, params, state, U)
 
 
-def _pic_predict_routed_diag(kfn, params, state, U):
+def _pic_predict_routed_diag(kfn, params, state, U, *, tile=None):
     from repro.core import ppic
-    return ppic.predict_routed_diag(kfn, params, state, U)
+    return ppic.predict_routed_diag(kfn, params, state, U, tile=tile)
 
 
 def _pitc_init_store(kfn, params, X, y, *, S, M: int):

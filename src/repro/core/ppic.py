@@ -21,7 +21,10 @@ assignment policies:
   serving time; centroids are cached in the state). A query's posterior then
   depends only on the query point and the fitted state — invariant to batch
   order and composition (tests/test_routing_equivalence.py) — which is what
-  arbitrary-traffic serving needs (launch/gp_serve.py).
+  arbitrary-traffic serving needs (launch/gp_serve.py). The diag variant
+  serves through the two-bucket capacity layout
+  (``runner.scatter_two_bucket``): ~(alpha+1)·|U| computed rows instead of
+  the skew-proof-but-padded M·|U| of ``scatter_by_block``, same posteriors.
 
 NB eq. (13) as printed drops a `Phi Sdd^{-1} Phi^T` term; the form implemented
 here is re-derived from Theorem 2 (see core/pitc.py) and verified against the
@@ -38,8 +41,9 @@ from repro.core import linalg
 from repro.core.gp import GPPosterior
 from repro.core.ppitc import (GlobalSummary, LocalSummary, ParallelPosterior,
                               global_summary, local_summary)
-from repro.parallel.runner import (Runner, gather_by_block, pad_blocks,
-                                   scatter_by_block)
+from repro.parallel.runner import (ROUTED_ALPHA, Runner, gather_by_block,
+                                   gather_two_bucket, pad_blocks,
+                                   scatter_by_block, scatter_two_bucket)
 
 
 def machine_step(kfn, params, S, Xm, ym, Um, *, axis_name):
@@ -115,34 +119,46 @@ def _block_posterior(kfn, params, state: api.PICState, Um, m_fields):
     Xm, ym, Ksd, C_L, Wy, ydot, beta, B = m_fields
     Kus = kfn(params, Um, state.S)
     Kud = kfn(params, Um, Xm)
-    ydot_u = Kud @ Wy
-    Wd = linalg.chol_solve(C_L, Kud.T)                 # C^{-1} K_{D_m U_m}
-    Sdot_su = Ksd @ Wd
-    Sdot_uu = Kud @ Wd
-    Phi = Kus + Kus @ B - Sdot_su.T                    # eq. (14)
-    mean = Phi @ state.alpha - Kus @ beta + ydot_u     # eq. (12)
+    rowdot = lambda A, v: jnp.sum(A * v[None, :], axis=1)
+    ydot_u = rowdot(Kud, Wy)
+    WdT = linalg.chol_solve_right(C_L, Kud)            # K_{U_m D_m} C^{-1}
+    Sdot_us = WdT @ Ksd.T                              # see the diag variant
+    Sdot_uu = WdT @ Kud.T
+    Phi = Kus + Kus @ B - Sdot_us                      # eq. (14)
+    mean = rowdot(Phi, state.alpha) - rowdot(Kus, beta) + ydot_u  # eq. (12)
     Kuu = kfn(params, Um, Um)
     covm = Kuu - (Phi @ linalg.chol_solve(state.Kss_L, Kus.T)
                   - Phi @ linalg.chol_solve(state.Sdd_L, Phi.T)
-                  - Kus @ linalg.chol_solve(state.Kss_L, Sdot_su)) - Sdot_uu
+                  - Kus @ linalg.chol_solve(state.Kss_L, Sdot_us.T)) - Sdot_uu
     return mean, covm
 
 
 def _block_posterior_diag(kfn, params, state: api.PICState, Um, m_fields):
-    """Diagonal of eqs. (12)-(13) for one query block, no |U_m|^2 buffers."""
+    """Diagonal of eqs. (12)-(13) for one query block, no |U_m|^2 buffers.
+
+    Every contraction keeps the query axis on matrix ROWS (row-wise
+    multiply-reduce instead of gemv, ``chol_solve_right`` instead of a
+    left-sided solve on Kᵀ, row-major gemms): XLA picks gemv/trsm/gemm
+    panel strategies from the row count and total width, so a query-COLUMN
+    formulation is not bitwise stable across slot positions or buffer
+    widths — which would break both the routed permutation-invariance
+    property and the two-bucket layout's equivalence to the capacity-|U|
+    layout (tests/test_routing_equivalence.py). Row-major forms are stable.
+    """
     Xm, ym, Ksd, C_L, Wy, ydot, beta, B = m_fields
     Kus = kfn(params, Um, state.S)
     Kud = kfn(params, Um, Xm)
-    ydot_u = Kud @ Wy
-    Wd = linalg.chol_solve(C_L, Kud.T)
-    Sdot_su = Ksd @ Wd
-    Phi = Kus + Kus @ B - Sdot_su.T
-    mean = Phi @ state.alpha - Kus @ beta + ydot_u
+    rowdot = lambda A, v: jnp.sum(A * v[None, :], axis=1)
+    ydot_u = rowdot(Kud, Wy)
+    WdT = linalg.chol_solve_right(C_L, Kud)            # K_{U_m D_m} C^{-1}
+    Sdot_us = WdT @ Ksd.T                              # (u, s)
+    Phi = Kus + Kus @ B - Sdot_us
+    mean = rowdot(Phi, state.alpha) - rowdot(Kus, beta) + ydot_u
     var = (cov.kdiag(kfn, params, Um)
-           - jnp.sum(Phi.T * linalg.chol_solve(state.Kss_L, Kus.T), 0)
-           + jnp.sum(Phi.T * linalg.chol_solve(state.Sdd_L, Phi.T), 0)
-           + jnp.sum(Kus.T * linalg.chol_solve(state.Kss_L, Sdot_su), 0)
-           - jnp.einsum("ub,bu->u", Kud, Wd))
+           - jnp.sum(Phi * linalg.chol_solve_right(state.Kss_L, Kus), 1)
+           + jnp.sum(Phi * linalg.chol_solve_right(state.Sdd_L, Phi), 1)
+           + jnp.sum(Kus * linalg.chol_solve_right(state.Kss_L, Sdot_us), 1)
+           - jnp.sum(Kud * WdT, 1))
     return mean, var
 
 
@@ -206,13 +222,45 @@ def route_queries(state: api.PICState, U) -> jax.Array:
     return jnp.argmin(d2, axis=1)
 
 
-def predict_routed_diag(kfn, params, state: api.PICState, U):
+def predict_routed_diag(kfn, params, state: api.PICState, U, *,
+                        alpha: int = ROUTED_ALPHA, tile: int | None = None):
     """Batch-composition-invariant (mean, var) for any |U|.
 
-    Scatters the batch to nearest-centroid blocks (capacity |U| per block, so
-    shapes — and the compiled executable — depend only on |U| and M), runs
-    the cached per-block program, and gathers back in caller order.
+    Scatters the batch to nearest-centroid blocks through the two-bucket
+    capacity scheme (``runner.scatter_two_bucket``): a (M, alpha*ceil(|U|/M))
+    main bucket plus a static set of skew-overflow groups, each served with
+    its recorded block's cached factors. Shapes — and the compiled
+    executable — still depend only on (|U|, M), but balanced traffic pays
+    ~(alpha+1)*|U| computed rows instead of the capacity-|U| layout's M*|U|.
+    Per-row posteriors are bitwise identical to that layout (every
+    predictive equation is row-independent; tests/test_routing_equivalence).
+
+    ``tile`` aligns the bucket width to the serving kernel's block_q so the
+    Pallas dispatch needs no second pad (launch/gp_serve.py threads it).
     """
+    M = state.Xb.shape[0]
+    if tile is None:   # a KernelSpec declares its serving tile; bare kfns: 1
+        tile = getattr(kfn, "block_q", None) or 1
+    assign = route_queries(state, U)
+    lay = scatter_two_bucket(U, assign, M, alpha=alpha, tile=tile)
+    one = lambda Um, *mf: _block_posterior_diag(kfn, params, state, Um, mf)
+    means, vars_ = jax.vmap(one)(lay.Xb, *_block_fields(state))
+    means_o = vars_o = None
+    if lay.Xo is not None:
+        # overflow groups: gather the owning block's cached factors per
+        # group (dynamic indices, static shapes — jit-safe)
+        mf_o = tuple(a[lay.o_blk] for a in _block_fields(state))
+        means_o, vars_o = jax.vmap(one)(lay.Xo, *mf_o)
+    return (gather_two_bucket(means, means_o, lay),
+            gather_two_bucket(vars_, vars_o, lay))
+
+
+def predict_routed_diag_capacity(kfn, params, state: api.PICState, U):
+    """Capacity-|U| routed reference (the pre-two-bucket layout): every block
+    gets a (|U|,)-slot buffer via ``scatter_by_block``. Kept as the oracle
+    the two-bucket path is property-tested against (bitwise) and for the
+    bench's padded-rows comparison; ``predict_routed`` still uses this
+    layout for its dense within-block covariance view."""
     M = state.Xb.shape[0]
     assign = route_queries(state, U)
     Ub, order, block_of, slot = scatter_by_block(U, assign, M)

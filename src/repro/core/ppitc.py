@@ -136,7 +136,18 @@ def predict_batch(kfn, params, state: api.PITCState, U) -> GPPosterior:
 
 
 def predict_batch_diag(kfn, params, state: api.PITCState, U):
-    """(mean, var) without forming the |U|x|U| posterior covariance."""
+    """(mean, var) without forming the |U|x|U| posterior covariance.
+
+    The serving hot path: with a ``cov.KernelSpec`` declaring a Pallas
+    implementation, the whole computation — K_US tile, both cached
+    triangular solves, and the variance quadratic form — collapses into the
+    fused ``xcov_diag`` kernel (kernels/rbf/xcov.py) and the (|U|, |S|)
+    cross-covariance never round-trips to HBM. The compose path below is
+    the math it is validated against (tests/test_xcov_fused.py).
+    """
+    if isinstance(kfn, cov.KernelSpec) and kfn.fuse(state.S.shape[0]):
+        return kfn.fused_diag(params, U, state.S, state.Kss_L, state.alpha,
+                              L2=state.Sdd_L)
     Kus = kfn(params, U, state.S)
     mean = Kus @ state.alpha
     A = linalg.chol_solve(state.Kss_L, Kus.T)         # Kss^{-1} K_SU

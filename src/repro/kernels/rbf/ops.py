@@ -1,9 +1,9 @@
-"""jit'd public wrapper for the fused RBF covariance kernel.
+"""jit'd public wrappers for the fused RBF kernels (covariance + serving).
 
 Handles padding (rows to block multiples, feature dim to a 128 multiple for
 MXU alignment), VMEM-aware block-size selection, and the CPU fallback
 (interpret mode executes the kernel body in Python — correct but slow, so the
-wrapper only routes through Pallas when asked or when on TPU).
+wrappers only route through Pallas when asked or when on TPU).
 """
 from __future__ import annotations
 
@@ -14,9 +14,13 @@ import jax.numpy as jnp
 
 from repro.kernels.rbf import ref
 from repro.kernels.rbf.rbf import rbf_pallas
+from repro.kernels.rbf.xcov import xcov_diag_pallas
 
 _LANE = 128
 _VMEM_BUDGET = 8 * 1024 * 1024   # bytes, conservative half of v5e VMEM
+# largest support-set padding the fused serving kernel keeps VMEM-resident:
+# two (s_pad, s_pad) f32 Cholesky factors at 1024 are 8 MiB total
+MAX_FUSED_RESIDENT = 1024
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -65,3 +69,69 @@ def rbf_covariance(Xq: jax.Array, Xk: jax.Array, sig2, *,
     out = rbf_pallas(Xq_p, Xk_p, sig2, block_q=bq, block_k=bk,
                      interpret=(impl == "pallas_interpret"))
     return out[:n, :m]
+
+
+def pick_serve_block_q(n: int) -> int:
+    """Query-tile size for the fused serving kernel at batch size n: the
+    largest sublane-aligned power of two not exceeding the (8-aligned) batch,
+    so small microbatches pad by < 2x and large ones tile at 256. This is
+    what ``launch.gp_serve.default_buckets`` aligns its bucket ladder to
+    (serving-shape selection benchmarked in benchmarks/bench_kernels.py)."""
+    for b in (256, 128, 64, 32, 16):
+        if n >= b:
+            return b
+    return 8
+
+
+def _embed_tri_inv(L: jax.Array, s_pad: int) -> jax.Array:
+    """(s, s) Cholesky factor -> (s_pad, s_pad) lower-triangular INVERSE,
+    embedded in an identity. Materializing L^{-1} here (plain XLA, outside
+    the kernel) is what lets the kernel apply the cached solve as an MXU
+    gemm — Mosaic cannot lower the triangular_solve primitive in-kernel.
+    The unit diagonal of the padding block keeps padded rows inert on the
+    masked-to-zero covariance columns."""
+    s = L.shape[0]
+    Linv = jax.lax.linalg.triangular_solve(
+        L, jnp.eye(s, dtype=L.dtype), left_side=True, lower=True)
+    if s == s_pad:
+        return Linv
+    return jnp.eye(s_pad, dtype=L.dtype).at[:s, :s].set(Linv)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_q"))
+def xcov_diag(Xq: jax.Array, Xk: jax.Array, L1: jax.Array, alpha: jax.Array,
+              sig2, L2: jax.Array | None = None, *, impl: str = "auto",
+              block_q: int | None = None):
+    """Fused serving hot path over pre-scaled inputs: (mean, var) of the
+    summary-method diag predict (see kernels/rbf/xcov.py) without the
+    (n, |S|) HBM round-trip.
+
+    Xq: (n, d) queries, Xk: (s, d) support/training set, L1/L2: (s, s)
+    cached lower Cholesky factors (variance = sig2 - q(L1) [+ q(L2)]),
+    alpha: (s,) cached weights. impl as in ``rbf_covariance``.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        return ref.xcov_diag(Xq, Xk, L1, alpha, sig2, L2)
+
+    n, _ = Xq.shape
+    s = Xk.shape[0]
+    Xq_p = _pad_to(Xq, 1, _LANE)
+    Xk_p = _pad_to(Xk, 1, _LANE)
+    s_pad = -(-s // _LANE) * _LANE
+    if s_pad > MAX_FUSED_RESIDENT:
+        raise ValueError(
+            f"|S|={s} exceeds the fused kernel's VMEM residency cap "
+            f"{MAX_FUSED_RESIDENT}; use the compose path (impl='jnp')")
+    Xk_p = _pad_to(Xk_p, 0, s_pad)
+    with_l2 = L2 is not None
+    L1_p = _embed_tri_inv(L1, s_pad)
+    L2_p = _embed_tri_inv(L2, s_pad) if with_l2 else L1_p
+    alpha_p = _pad_to(alpha[None, :], 1, s_pad)
+    bq = block_q or pick_serve_block_q(n)
+    Xq_p = _pad_to(Xq_p, 0, bq)
+    mean, var = xcov_diag_pallas(Xq_p, Xk_p, L1_p, L2_p, alpha_p, sig2,
+                                 s_valid=s, with_l2=with_l2, block_q=bq,
+                                 interpret=(impl == "pallas_interpret"))
+    return mean[:n], var[:n]

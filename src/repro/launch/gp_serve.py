@@ -51,20 +51,32 @@ import numpy as np
 from repro.core import api, clustering, serialize
 
 
-def default_buckets(max_batch: int, *, min_bucket: int = 8) -> tuple[int, ...]:
-    """Powers of two from min_bucket up, capped by max_batch (inclusive).
+def default_buckets(max_batch: int, *, min_bucket: int = 8,
+                    block_q: int = 1) -> tuple[int, ...]:
+    """Powers of two from min_bucket up, capped by max_batch (inclusive),
+    each rounded up to a multiple of ``block_q``.
+
+    ``block_q`` is the Pallas serving kernel's query-tile size: emitting
+    bucket sizes on tile boundaries means the jitted predict's padded batch
+    IS the kernel grid — no second pad inside the kernel dispatch (the
+    fused ``xcov_diag`` and the two-bucket routed scatter both consume the
+    same alignment). ``GPServer`` passes its tile (f32 sublane 8 by
+    default, or the KernelSpec's declared ``block_q``); the bare default 1
+    keeps direct calls' ladders ending exactly at max_batch. Powers of two
+    >= 8 are already 8-aligned, so the historical ladder is unchanged.
 
     Deduplicated by construction: a duplicate bucket would compile the same
     executable twice and skew padding stats, so the ladder is squeezed
-    through ``dict.fromkeys`` regardless of how the loop and the trailing
-    ``max_batch`` append interact (regression-tested exhaustively in
-    tests/test_api_state.py)."""
+    through ``dict.fromkeys`` regardless of how the loop, the rounding, and
+    the trailing ``max_batch`` append interact (regression-tested
+    exhaustively in tests/test_api_state.py)."""
+    align = lambda v: -(-v // block_q) * block_q
     sizes = []
     b = min_bucket
     while b < max_batch:
-        sizes.append(b)
+        sizes.append(align(b))
         b *= 2
-    sizes.append(max_batch)
+    sizes.append(align(max_batch))
     return tuple(dict.fromkeys(sizes))
 
 
@@ -106,11 +118,16 @@ class GPServer:
                  flush_deadline_ms: float | None = None,
                  routed: bool = False,
                  store: api.StateStore | None = None,
+                 block_q: int | None = None,
                  clock: Callable[[], float] = time.monotonic):
         self.model = model
         self.store = store
         self.max_batch = max_batch
-        self.buckets = tuple(sorted(set(buckets or default_buckets(max_batch))))
+        # bucket padding lands on the serving kernel's query-tile boundary:
+        # explicit arg > the KernelSpec's declared tile > f32 sublane (8)
+        self.block_q = (block_q or getattr(model.kfn, "block_q", None) or 8)
+        self.buckets = tuple(sorted(set(
+            buckets or default_buckets(max_batch, block_q=self.block_q))))
         if self.buckets[-1] < max_batch:
             raise ValueError(f"largest bucket {self.buckets[-1]} < "
                              f"max_batch {max_batch}")
@@ -128,11 +145,21 @@ class GPServer:
                 f"routed=True but method {method.name!r} has no "
                 f"predict_routed_diag (needs a state with block centroids, "
                 f"e.g. ppic/pic)")
-        diag = method.predict_routed_diag if routed else method.predict_diag
         # params/state are traced arguments: hot-swapping either re-runs the
         # same compiled executable as long as shapes/dtypes are unchanged.
-        self._predict_fn: Callable = jax.jit(
-            lambda params, state, U: diag(kfn, params, state, U))
+        if routed:
+            # thread the serving tile into the routed scatter so its bucket
+            # widths land on the same boundary as the bucket ladder (the
+            # registry contract: predict_routed_diag accepts tile=)
+            diag = method.predict_routed_diag
+            tile = self.block_q
+            self._predict_fn: Callable = jax.jit(
+                lambda params, state, U: diag(kfn, params, state, U,
+                                              tile=tile))
+        else:
+            diag = method.predict_diag
+            self._predict_fn = jax.jit(
+                lambda params, state, U: diag(kfn, params, state, U))
 
     # -- request path -------------------------------------------------------
 

@@ -16,7 +16,7 @@ stacked outputs (M, ...), so callers are backend-agnostic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -175,6 +175,131 @@ def gather_by_block(vals: jax.Array, order: jax.Array, block_of: jax.Array,
     picked = vals[block_of, slot]                          # sorted order
     out = jnp.zeros_like(picked)
     return out.at[order].set(picked)
+
+
+# ---------------------------------------------------------------------------
+# Two-bucket routed scatter: capacity-bounded main bucket + skew overflow.
+#
+# ``scatter_by_block``'s capacity-n layout is shape-stable and skew-proof but
+# computes M*n rows to serve n queries — an M x compute overhead for balanced
+# traffic. The two-bucket scheme keeps both properties at ~(1 + 1/alpha) x:
+#
+#   * main bucket    — (M, cap) per-block layout with cap = alpha*ceil(n/M):
+#     each block keeps its first cap routed rows (stable order);
+#   * overflow bucket — (G, cap) groups for the rows a skewed batch pushes
+#     past a block's capacity. Rows are packed positionally into groups, one
+#     BLOCK per group (block m's overflow fills ceil/cap groups exclusively),
+#     and each group records the block id whose cached factors serve it —
+#     the caller gathers that block's state fields per group, so an overflow
+#     row computes the SAME per-row program as the capacity-n layout
+#     (bitwise: every predictive equation is row-independent).
+#
+# G is static: blocks that overflow hold > cap >= alpha*n/M rows, so at most
+# n/cap <= M/alpha blocks overflow, and sum_m ceil(o_m/cap) <= n/cap, giving
+# G = ceil(M/alpha). Total padded rows: (M + G)*cap ~ (alpha + 1)*n versus
+# M*n — at M=8, alpha=2 that is 3n vs 8n (the >= 2x reduction gate in
+# benchmarks/bench_serve_latency.py). When cap >= n no row can overflow and
+# the overflow bucket is dropped entirely (G = 0).
+# ---------------------------------------------------------------------------
+
+ROUTED_ALPHA = 2   # main-bucket capacity multiplier alpha (headroom vs skew)
+
+
+class RoutedLayout(NamedTuple):
+    """Two-bucket scatter result + the bookkeeping to invert it.
+
+    ``Xb[block_of[j], rank[j]] == X[order[j]]`` for main rows
+    (``in_main[j]``); overflow row j sits at ``Xo[group[j], slot_o[j]]`` and
+    must be served with block ``block_of[j]``'s factors (= ``o_blk`` of its
+    group). Pass per-row outputs to ``gather_two_bucket``.
+    """
+    Xb: jax.Array              # (M, cap, ...) main routed bucket
+    Xo: jax.Array | None       # (G, cap, ...) overflow groups (None: G == 0)
+    o_blk: jax.Array | None    # (G,) block id served by each overflow group
+    order: jax.Array           # (n,) argsort(assign), stable
+    block_of: jax.Array        # (n,) assignment in sorted order
+    rank: jax.Array            # (n,) intra-block arrival rank
+    group: jax.Array           # (n,) overflow group per row (junk if in_main)
+    slot_o: jax.Array          # (n,) slot within the overflow group
+    in_main: jax.Array         # (n,) bool: row landed in the main bucket
+
+    @property
+    def padded_rows(self) -> int:
+        """Total computed rows (both buckets) — the compute the layout pays."""
+        go = 0 if self.Xo is None else self.Xo.shape[0]
+        return (self.Xb.shape[0] + go) * self.Xb.shape[1]
+
+
+def routed_capacity(n: int, M: int, *, alpha: int = ROUTED_ALPHA,
+                    tile: int = 1) -> tuple[int, int]:
+    """(cap, G) of the two-bucket layout — static given (n, M, alpha).
+
+    ``tile`` rounds cap up to a hardware tile multiple (the Pallas serving
+    kernel's block_q), so the per-group query buffers need no second pad
+    inside the kernel dispatch."""
+    cap = min(alpha * (-(-n // M)), n)
+    cap = -(-cap // tile) * tile
+    G = 0 if cap >= n else -(-M // alpha)
+    return cap, G
+
+
+def scatter_two_bucket(X: jax.Array, assign: jax.Array, M: int, *,
+                       alpha: int = ROUTED_ALPHA,
+                       tile: int = 1) -> RoutedLayout:
+    """Scatter (n, ...) rows into the two-bucket routed layout by assignment.
+
+    Shape-stable: every array depends only on (n, M, alpha, tile), so any
+    composition of a same-sized batch reuses the compiled executable — the
+    property that makes routed serving jit-friendly (see scatter_by_block).
+    Unoccupied slots stay zero; per-row independence of the predictive
+    equations makes them inert (see ``pad_blocks``).
+    """
+    n = X.shape[0]
+    cap, G = routed_capacity(n, M, alpha=alpha, tile=tile)
+    order = jnp.argsort(assign, stable=True)               # group by block
+    block_of = assign[order]                               # (n,) sorted ids
+    starts = jnp.searchsorted(block_of, jnp.arange(M + 1))
+    counts = jnp.diff(starts)                              # (M,) block loads
+    rank = jnp.arange(n) - starts[block_of]                # intra-block rank
+    in_main = rank < cap
+
+    Xb = jnp.zeros((M, cap) + X.shape[1:], X.dtype)
+    Xb = Xb.at[jnp.where(in_main, block_of, M),
+               jnp.where(in_main, rank, 0)].set(X[order], mode="drop")
+
+    if G == 0:
+        zero = jnp.zeros((n,), jnp.int32)
+        return RoutedLayout(Xb, None, None, order, block_of, rank,
+                            zero, zero, in_main)
+
+    # overflow: block m's surplus o_m fills ceil(o_m/cap) exclusive groups
+    om = jnp.maximum(counts - cap, 0)
+    gm = -(-om // cap)                                     # groups per block
+    gstart = jnp.cumsum(gm) - gm                           # exclusive prefix
+    orank = rank - cap                                     # >= 0 iff overflow
+    group = gstart[block_of] + jnp.maximum(orank, 0) // cap
+    slot_o = jnp.maximum(orank, 0) % cap
+    gi = jnp.where(in_main, G, group)                      # OOB drop for main
+    Xo = jnp.zeros((G, cap) + X.shape[1:], X.dtype)
+    Xo = Xo.at[gi, jnp.where(in_main, 0, slot_o)].set(X[order], mode="drop")
+    o_blk = jnp.zeros((G,), block_of.dtype).at[gi].set(block_of, mode="drop")
+    return RoutedLayout(Xb, Xo, o_blk, order, block_of, rank,
+                        group, slot_o, in_main)
+
+
+def gather_two_bucket(vals_main: jax.Array, vals_over: jax.Array | None,
+                      lay: RoutedLayout) -> jax.Array:
+    """Invert ``scatter_two_bucket`` on per-row outputs: (M, cap, ...) +
+    (G, cap, ...) -> (n, ...) in the original caller order."""
+    picked = vals_main[lay.block_of, jnp.minimum(lay.rank,
+                                                 vals_main.shape[1] - 1)]
+    if vals_over is not None:
+        over = vals_over[jnp.minimum(lay.group, vals_over.shape[0] - 1),
+                         lay.slot_o]
+        cond = lay.in_main.reshape((-1,) + (1,) * (picked.ndim - 1))
+        picked = jnp.where(cond, picked, over)
+    out = jnp.zeros_like(picked)
+    return out.at[lay.order].set(picked)
 
 
 def make_runner(mode: str, *, M: int | None = None, mesh: Mesh | None = None,

@@ -214,6 +214,33 @@ class TestGPServer:
                 assert list(bs) == sorted(bs)
                 assert bs[-1] == max_batch
 
+    def test_default_buckets_align_to_block_q(self):
+        """ISSUE satellite: every bucket is a multiple of the Pallas serving
+        tile, so the padded microbatch IS the kernel grid (no second pad
+        inside the dispatch). The historical block_q=8 ladder is unchanged."""
+        for block_q in (8, 16, 32, 128):
+            for max_batch in (1, 7, 8, 33, 64, 200, 256):
+                bs = default_buckets(max_batch, block_q=block_q)
+                assert all(b % block_q == 0 for b in bs), (block_q, bs)
+                assert len(set(bs)) == len(bs)
+                assert list(bs) == sorted(bs)
+                assert bs[-1] >= max_batch
+        assert default_buckets(64, block_q=8) == (8, 16, 32, 64)
+
+    def test_server_buckets_follow_spec_block_q(self, prob, runner):
+        """A KernelSpec's declared tile propagates into the bucket ladder."""
+        from repro.core import covariance as cov
+        spec = cov.make_spec("se", block_q=16)
+        model = api.fit("ppitc", spec, prob["params"], prob["X"],
+                        prob["y"], S=prob["S"], runner=runner)
+        srv = GPServer(model, max_batch=40)
+        assert srv.block_q == 16
+        assert all(b % 16 == 0 for b in srv.buckets)
+        m, v = srv.predict(prob["U"][:5])       # pads to a 16-aligned bucket
+        ref_m, ref_v = model.predict_diag(prob["U"][:5])
+        np.testing.assert_allclose(m, ref_m, atol=1e-12)
+        np.testing.assert_allclose(v, ref_v, atol=1e-12)
+
     def test_oversized_batch(self, prob, runner):
         model = api.fit("ppitc", prob["kfn"], prob["params"], prob["X"],
                         prob["y"], S=prob["S"], runner=runner)

@@ -89,7 +89,8 @@ class TestIncrementalToState:
                                p["y"][:n1], S=p["S"], runner=runner)
         store = store.assimilate(p["X"][n1:], p["y"][n1:])
         # full recompute of the SAME summaries (alive-mask refold)
-        ref = online.with_alive(store.store, store.store.alive)
+        ref = online.with_alive(store.store, store.store.alive,
+                                mode="refold")
         np.testing.assert_allclose(store.store.Sdd_L, ref.Sdd_L, atol=1e-5)
         st_inc = store.to_state()
         st_ref = online.to_state(ref, p["S"])
@@ -104,7 +105,8 @@ class TestIncrementalToState:
         p = prob
         store = api.init_store("ppitc", p["kfn"], p["params"], p["X"],
                                p["y"], S=p["S"], runner=runner).retire(1)
-        ref = online.with_alive(store.store, store.store.alive)
+        ref = online.with_alive(store.store, store.store.alive,
+                                mode="refold")
         np.testing.assert_allclose(store.store.Sdd_L, ref.Sdd_L, atol=1e-5)
 
     def test_to_state_has_no_cubic_refactorization(self, prob, runner):
@@ -125,6 +127,80 @@ class TestIncrementalToState:
 # Store lifecycle (issue satellite): retire -> revive -> to_state roundtrip,
 # assimilate-then-checkpoint == recompute-from-scratch
 # ---------------------------------------------------------------------------
+
+class TestWithAliveHamming:
+    """``online.with_alive`` picks rank-b cholupdate/downdate vs full refold
+    by the Hamming distance of the alive mask (ISSUE satellite): small
+    deadline flips are O(|S|²·b) retire/revive chains, wholesale flips take
+    the one-pass O(|S|³) refold. Both must produce the same matrix."""
+
+    def _store(self, prob, runner):
+        # M=12 -> b=8 < |S|: the regime where rank-b updates beat the
+        # refold (the fixture's b=24 > |S|=12 would always refold — for
+        # blocks wider than the support set, re-factorizing |S|³/3 is
+        # genuinely cheaper than b rank-1 sweeps)
+        del runner
+        return api.init_store("ppitc", prob["kfn"], prob["params"],
+                              prob["X"], prob["y"], S=prob["S"],
+                              runner=VmapRunner(M=12))
+
+    def test_small_flip_is_incremental(self, prob, runner):
+        """A single-machine flip must follow the retire float path exactly
+        (bitwise): the incremental branch IS a retire chain."""
+        store = self._store(prob, runner)
+        mask = np.asarray(store.alive).copy()
+        mask[1] = False
+        flipped = store.with_alive(jnp.asarray(mask))
+        np.testing.assert_array_equal(flipped.store.Sdd_L,
+                                      store.retire(1).store.Sdd_L)
+
+    def test_incremental_matches_refold(self, prob, runner):
+        store = self._store(prob, runner)
+        mask = np.asarray(store.alive).copy()
+        mask[0] = mask[3] = False
+        inc = online.with_alive(store.store, jnp.asarray(mask),
+                                mode="incremental")
+        ref = online.with_alive(store.store, jnp.asarray(mask),
+                                mode="refold")
+        np.testing.assert_array_equal(inc.alive, ref.alive)
+        np.testing.assert_allclose(inc.Sdd_L, ref.Sdd_L, atol=1e-10)
+        np.testing.assert_allclose(inc.ydd, ref.ydd, atol=1e-10)
+
+    def test_wholesale_flip_refolds(self, prob, runner):
+        """Flipping every machine exceeds the h·b crossover: auto must take
+        the refold float path (bitwise equal to mode='refold')."""
+        store = self._store(prob, runner)
+        mask = ~np.asarray(store.alive)
+        mask[0] = True                      # keep one machine alive
+        auto = online.with_alive(store.store, jnp.asarray(mask))
+        ref = online.with_alive(store.store, jnp.asarray(mask),
+                                mode="refold")
+        np.testing.assert_array_equal(auto.Sdd_L, ref.Sdd_L)
+
+    def test_noop_mask_returns_store_unchanged(self, prob, runner):
+        store = self._store(prob, runner)
+        same = online.with_alive(store.store, store.store.alive)
+        np.testing.assert_array_equal(same.Sdd_L, store.store.Sdd_L)
+
+    def test_bad_mode_rejected(self, prob, runner):
+        store = self._store(prob, runner)
+        with pytest.raises(ValueError, match="with_alive mode"):
+            online.with_alive(store.store, store.store.alive, mode="nope")
+
+    def test_traceable_under_jit(self, prob, runner):
+        """A traced mask cannot drive the host-side Hamming dispatch:
+        'auto' must fall back to the pure-jnp refold (and still be right);
+        forcing 'incremental' under trace is an explicit error."""
+        store = self._store(prob, runner)
+        mask = store.store.alive.at[1].set(False)
+        jit_ydd = jax.jit(
+            lambda m: online.with_alive(store.store, m).ydd)(mask)
+        ref = online.with_alive(store.store, mask, mode="refold")
+        np.testing.assert_allclose(jit_ydd, ref.ydd, atol=1e-12)
+        with pytest.raises(ValueError, match="concrete masks"):
+            jax.jit(lambda m: online.with_alive(
+                store.store, m, mode="incremental").ydd)(mask)
+
 
 class TestStoreLifecycle:
     def test_protocol_membership(self, prob, runner):
@@ -245,7 +321,8 @@ class TestStoreLifecycle:
         X2 = jax.random.normal(jax.random.PRNGKey(5), (6, 3), jnp.float64)
         y2 = jnp.sin(X2[:, 0])
         grown = store.assimilate(X2, y2, runner=VmapRunner(M=2))   # b=3
-        ref = online.with_alive(grown.store, grown.store.alive)
+        ref = online.with_alive(grown.store, grown.store.alive,
+                                mode="refold")
         np.testing.assert_allclose(grown.store.Sdd_L, ref.Sdd_L, atol=1e-10)
 
 

@@ -1,0 +1,166 @@
+"""Interpret-mode equivalence suite for the fused serving kernel
+(kernels/rbf/xcov.py) and the KernelSpec dispatch that feeds it.
+
+The fused ``xcov_diag`` collapses cross-covariance assembly, both cached
+triangular solves, and the predictive-variance quadratic form into one
+Pallas pass. Gates (ISSUE acceptance): it matches the ref.py compose path to
+<= 1e-5 in float32 and <= 1e-10 in float64, across the serving bucket shape
+ladder (including non-aligned |S| and query counts that exercise both the
+support-column masking and the query-row padding), and the KernelSpec-routed
+predict paths (ppitc/fgp) agree with their dense compose equivalents.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import covariance as cov, gp, ppitc
+from repro.kernels.rbf import ops as rbf_ops, ref as rbf_ref
+from repro.parallel.runner import VmapRunner
+
+from helpers import make_problem
+
+# acceptance gates: fused vs compose, interpret mode
+TOL = {jnp.dtype(jnp.float32): 1e-5, jnp.dtype(jnp.float64): 1e-10}
+
+
+def _factors(s, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    A1 = jax.random.normal(ks[0], (s, s), dtype)
+    A2 = jax.random.normal(ks[1], (s, s), dtype)
+    L1 = jnp.linalg.cholesky(A1 @ A1.T + s * jnp.eye(s, dtype=dtype))
+    L2 = jnp.linalg.cholesky(A2 @ A2.T + 2 * s * jnp.eye(s, dtype=dtype))
+    alpha = jax.random.normal(ks[2], (s,), dtype)
+    return L1, L2, alpha
+
+
+class TestXcovDiagKernel:
+    # serving bucket ladder (default_buckets) + unaligned stragglers
+    @pytest.mark.parametrize("n", [1, 8, 16, 33, 64, 128, 200, 256])
+    @pytest.mark.parametrize("s,d", [(12, 3), (128, 8), (130, 21)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_matches_compose_ref(self, n, s, d, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(n * s + d), 2)
+        Xq = jax.random.normal(ks[0], (n, d), dtype)
+        Xk = jax.random.normal(ks[1], (s, d), dtype)
+        L1, L2, alpha = _factors(s, dtype)
+        tol = TOL[jnp.dtype(dtype)]
+        for L2_ in (L2, None):
+            m_r, v_r = rbf_ref.xcov_diag(Xq, Xk, L1, alpha, 1.3, L2_)
+            m_p, v_p = rbf_ops.xcov_diag(Xq, Xk, L1, alpha, 1.3, L2_,
+                                         impl="pallas_interpret")
+            assert float(jnp.abs(m_p - m_r).max()) <= tol
+            assert float(jnp.abs(v_p - v_r).max()) <= tol
+
+    def test_explicit_block_q_tiles(self):
+        """A declared serving tile (bucket-aligned batches) changes the grid,
+        not the numbers."""
+        Xq = jax.random.normal(jax.random.PRNGKey(0), (64, 5), jnp.float32)
+        Xk = jax.random.normal(jax.random.PRNGKey(1), (40, 5), jnp.float32)
+        L1, L2, alpha = _factors(40, jnp.float32)
+        ref = rbf_ops.xcov_diag(Xq, Xk, L1, alpha, 0.9, L2,
+                                impl="pallas_interpret")
+        for bq in (8, 16, 64):
+            out = rbf_ops.xcov_diag(Xq, Xk, L1, alpha, 0.9, L2,
+                                    impl="pallas_interpret", block_q=bq)
+            np.testing.assert_allclose(out[0], ref[0], atol=1e-6)
+            np.testing.assert_allclose(out[1], ref[1], atol=1e-6)
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.integers(1, 150), s=st.integers(2, 90), d=st.integers(1, 24),
+           seed=st.integers(0, 2**16))
+    def test_property_random_shapes(self, n, s, d, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        Xq = jax.random.normal(ks[0], (n, d), jnp.float32)
+        Xk = jax.random.normal(ks[1], (s, d), jnp.float32)
+        L1, L2, alpha = _factors(s, jnp.float32, seed=seed)
+        m_r, v_r = rbf_ref.xcov_diag(Xq, Xk, L1, alpha, 1.1, L2)
+        m_p, v_p = rbf_ops.xcov_diag(Xq, Xk, L1, alpha, 1.1, L2,
+                                     impl="pallas_interpret")
+        assert float(jnp.abs(m_p - m_r).max()) <= 1e-5
+        assert float(jnp.abs(v_p - v_r).max()) <= 1e-5
+
+    def test_resident_cap_guard(self):
+        s = rbf_ops.MAX_FUSED_RESIDENT + 1
+        Xq = jnp.zeros((8, 2), jnp.float32)
+        Xk = jnp.zeros((s, 2), jnp.float32)
+        L = jnp.eye(s, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="residency cap"):
+            rbf_ops.xcov_diag(Xq, Xk, L, jnp.zeros((s,)), 1.0,
+                              impl="pallas_interpret")
+
+
+class TestKernelSpecDispatch:
+    @pytest.fixture(scope="class")
+    def prob(self):
+        return make_problem(dtype=jnp.float64)
+
+    def test_spec_is_callable_kernel(self, prob):
+        """A spec drops in wherever a KernelFn goes; on CPU 'auto' resolves
+        to the dense path bitwise."""
+        spec = cov.make_spec("se")
+        K0 = prob["kfn"](prob["params"], prob["X"][:7], prob["S"])
+        K1 = spec(prob["params"], prob["X"][:7], prob["S"])
+        np.testing.assert_array_equal(np.asarray(K0), np.asarray(K1))
+
+    def test_spec_diag_is_signal_variance(self, prob):
+        spec = cov.make_spec("se")
+        d = cov.kdiag(spec, prob["params"], prob["U"])
+        sig2 = float(cov.signal_var(prob["params"]))
+        np.testing.assert_allclose(np.asarray(d), sig2, rtol=1e-12)
+
+    def test_fuse_gating(self):
+        assert not cov.make_spec("se", impl="jnp").fuse(64)
+        assert not cov.make_spec("se", impl="pallas_interpret",
+                                 fused=False).fuse(64)
+        assert cov.make_spec("se", impl="pallas_interpret").fuse(64)
+        assert not cov.make_spec("se", impl="pallas_interpret").fuse(
+            rbf_ops.MAX_FUSED_RESIDENT + 1)
+        assert not cov.make_spec("matern52", impl="pallas_interpret").fuse(64)
+
+    def test_unknown_kernel_rejected(self):
+        with pytest.raises(ValueError, match="unknown kernel"):
+            cov.make_spec("nope")
+
+    @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                           (jnp.float64, 1e-10)])
+    def test_ppitc_fused_equals_compose(self, dtype, tol):
+        p = make_problem(dtype=dtype)
+        runner = VmapRunner(M=p["M"])
+        st_ = ppitc.fit(p["kfn"], p["params"], p["X"], p["y"], S=p["S"],
+                        runner=runner)
+        m0, v0 = ppitc.predict_batch_diag(p["kfn"], p["params"], st_, p["U"])
+        spec = cov.make_spec("se", impl="pallas_interpret")
+        m1, v1 = ppitc.predict_batch_diag(spec, p["params"], st_, p["U"])
+        assert float(jnp.abs(m1 - m0).max()) <= 10 * tol
+        assert float(jnp.abs(v1 - v0).max()) <= 10 * tol
+
+    @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                           (jnp.float64, 1e-10)])
+    def test_fgp_fused_equals_compose(self, dtype, tol):
+        p = make_problem(dtype=dtype)
+        st_ = gp.fit(p["kfn"], p["params"], p["X"], p["y"])
+        m0, v0 = gp.predict_batch_diag(p["kfn"], p["params"], st_, p["U"])
+        spec = cov.make_spec("se", impl="pallas_interpret")
+        m1, v1 = gp.predict_batch_diag(spec, p["params"], st_, p["U"])
+        assert float(jnp.abs(m1 - m0).max()) <= 10 * tol
+        assert float(jnp.abs(v1 - v0).max()) <= 10 * tol
+
+    def test_jit_closure_hot_swap(self):
+        """The serving pattern: spec closed over in a jitted predict, state
+        hot-swapped without retrace (launch/gp_serve.py)."""
+        p = make_problem(dtype=jnp.float32)
+        runner = VmapRunner(M=p["M"])
+        st_ = ppitc.fit(p["kfn"], p["params"], p["X"], p["y"], S=p["S"],
+                        runner=runner)
+        spec = cov.make_spec("se", impl="pallas_interpret")
+        traces = []
+        def f(params, state, U):
+            traces.append(1)
+            return ppitc.predict_batch_diag(spec, params, state, U)
+        fj = jax.jit(f)
+        fj(p["params"], st_, p["U"])
+        st2 = jax.tree.map(lambda a: a + 0, st_)     # same shapes, new leaves
+        fj(p["params"], st2, p["U"])
+        assert len(traces) == 1
