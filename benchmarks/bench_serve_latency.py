@@ -36,7 +36,13 @@ loudly on a regression):
   scheme trades (M+G)·cap computed rows for M+G dispatched programs, and
   XLA-CPU's batched triangular solve bills per PROGRAM almost independently
   of the RHS width, so the row saving only cashes out where the solve is
-  column-scaled (TPU/GPU). Both latencies are emitted either way.
+  column-scaled (TPU/GPU). Both latencies are emitted either way;
+* plan_vs_legacy — the serving-plan backend cache
+  (``ServeSpec(cached_cinv=True)``): the routed flush executable serving
+  the per-block solve from precomputed C⁻¹ (one batched matmul) must BEAT
+  the per-flush batched-trsm program on CPU — the cached-C⁻¹ design exists
+  precisely because CPU trsm bills per program (asserted; same-g
+  executables compared on the same padded batch, posteriors allclose).
 """
 from __future__ import annotations
 
@@ -49,7 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, covariance as cov, ppic, ppitc, support
+from repro.core import api, clustering, covariance as cov, ppic, ppitc, \
+    support
 from repro.data import synthetic
 from repro.launch.gp_serve import GPServer
 from repro.parallel.runner import (ShardMapRunner, VmapRunner,
@@ -133,10 +140,11 @@ def ticket_latency_ms(model, U, *, n_req: int, interarrival_ms: float,
     t = [0.0]
     srv = GPServer(model, max_batch=max_batch, flush_deadline_ms=deadline_ms,
                    routed=routed, clock=lambda: t[0])
-    # steady-state measurement: pre-compile every bucket the sim can hit so
-    # one-time XLA compilation doesn't masquerade as queueing latency
-    for bucket in srv.buckets:
-        jax.block_until_ready(srv.predict(U[:min(bucket, U.shape[0])])[0])
+    # steady-state measurement: pre-compile every executable the sim can
+    # hit — all buckets AND, for routed plans, the whole overflow-group
+    # ladder — so one-time XLA compilation doesn't masquerade as queueing
+    # latency (a mid-sim compile lands on one unlucky flush and owns p99)
+    srv.plan.warmup(U.shape[1], dtype=np.asarray(U).dtype)
     submit_at: dict[int, float] = {}
     done_at: dict[int, float] = {}
 
@@ -301,6 +309,46 @@ def run(quick: bool = False, smoke: bool = False):
     common.emit(f"serve/routed_capacity{u_r}/n{n}", t_cap,
                 f"two_bucket_us={t_routed:.1f}")
 
+    # --- serving-plan backend cache: cached C^{-1} vs per-flush trsm -------
+    # The plan/execute split's headline backend cache (ServeSpec
+    # cached_cinv): the routed flush's per-block solve becomes one batched
+    # matmul against precomputed (C_L C_L^T)^{-1}. Compared at the
+    # EXECUTABLE level — same overflow-group program g, same padded batch —
+    # so the claim isolates trsm-vs-matmul, not host staging. CPU is where
+    # this pays (batched trsm bills per program there), hence the gate is
+    # asserted on CPU; it holds a fortiori where solves are column-scaled.
+    spec_t = api.ServeSpec(routed=True, max_batch=max(batches))
+    spec_c = dataclasses.replace(spec_t, cached_cinv=True)
+    plan_t = pic_model.plan(spec_t)
+    plan_c = pic_model.plan(spec_c)
+    m_t, v_t = plan_t.routed_diag(Ur)
+    m_c, v_c = plan_c.routed_diag(Ur)
+    assert jnp.allclose(m_c, m_t, rtol=1e-3, atol=1e-3), \
+        float(jnp.abs(m_c - m_t).max())
+    assert jnp.allclose(v_c, v_t, rtol=1e-3, atol=1e-3), \
+        float(jnp.abs(v_c - v_t).max())
+    bucket = plan_t.bucket_for(u_r)
+    Upad = np.zeros((bucket, Ur.shape[1]), np.asarray(Ur).dtype)
+    Upad[:u_r] = np.asarray(Ur)
+    # the plan's own routing decision: the timed program must be provisioned
+    # exactly as a real flush's (pad rows packed into spare main capacity)
+    assign, g = plan_t._route(Upad, u_r)
+    ex_t, ex_c = plan_t._routed_exec(g), plan_c._routed_exec(g)
+    t_trsm = np.median([common.timeit(
+        lambda: ex_t(params, pic_state, None, Upad, assign)[0],
+        repeats=20, warmup=2) for _ in range(5)])
+    t_cinv = np.median([common.timeit(
+        lambda: ex_c(params, pic_state, plan_c.caches, Upad, assign)[0],
+        repeats=20, warmup=2) for _ in range(5)])
+    common.emit(f"serve/plan_vs_legacy/u{u_r}", t_cinv,
+                f"trsm_us={t_trsm:.1f};g={g};"
+                f"speedup={t_trsm / max(t_cinv, 1e-9):.2f}x")
+    common.metric("plan_cinv_speedup", t_trsm / max(t_cinv, 1e-9))
+    if jax.default_backend() == "cpu":
+        assert t_cinv <= t_trsm, \
+            (f"cached-C^-1 routed flush {t_cinv:.0f}us not faster than the "
+             f"trsm path {t_trsm:.0f}us on CPU (g={g})")
+
     # --- deadline flusher vs size-only trigger: p50/p99 at low arrival rate
     # max_batch=64 + 2ms interarrival: the size trigger alone would hold the
     # oldest ticket ~126ms; a 20ms deadline caps that regardless of traffic
@@ -327,8 +375,8 @@ def run(quick: bool = False, smoke: bool = False):
     # the RHS width, so the ~(alpha+1)/M row reduction — asserted
     # deterministically above — does not cash out on CPU wall-clock.
     cap_method = dataclasses.replace(
-        api.get("ppic"),
-        predict_routed_diag=lambda k, p, s, U, tile=None:
+        api.get("ppic"), plan_fn=None,   # generic plan jits the raw impl
+        predict_routed_diag_fn=lambda k, p, s, U, tile=None:
             ppic.predict_routed_diag_capacity(k, p, s, U))
     cap_model = api.FittedGP(cap_method, kfn, params, pic_state)
     lat_cap = ticket_latency_ms(cap_model, Ur, deadline_ms=20.0, **sim)

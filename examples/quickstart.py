@@ -21,8 +21,11 @@ M = 8
 # 1. data (paper Sec. 6 scale-down): 5-d traffic-speed-like field
 ds = synthetic.standardize(synthetic.aimpeak_like(key, n=2048, n_test=256))
 
-# 2. kernel + hyperparameters (see examples/sarcos_robot.py for MLE fitting)
-kfn = cov.make_kernel("se")
+# 2. kernel + hyperparameters (see examples/sarcos_robot.py for MLE fitting).
+#    A KernelSpec (not a bare function) declares HOW covariances are built —
+#    impl="auto" serves the Pallas fused path on TPU and dense jnp on CPU —
+#    and threads through every predict path, full covariance included.
+kfn = cov.make_spec("se")
 params = cov.init_params(d=5, signal=1.0, noise=0.3, lengthscale=1.2)
 
 # 3. support set: greedy differential-entropy selection (Sec. 3, Def. 2)
@@ -38,15 +41,21 @@ Xc, yc, Uc, _, perm_u = clustering.cocluster(
 model = api.fit("ppic", kfn, params, jnp.asarray(Xc), jnp.asarray(yc),
                 S=S, runner=VmapRunner(M=M))
 
-# 5. predict from the cached state (repeatable at O(|U||S|) per call)
+# 5. predict from the cached state (repeatable at O(|U||S|) per call).
+#    FittedGP.predict* are thin clients of a ServePlan (phase-1/phase-2
+#    split): the jitted executables are built once and reused per call.
 post = model.predict(jnp.asarray(Uc))
 mean = jnp.asarray(clustering.uncluster(np.asarray(post.mean), perm_u))
 
 # 5b. the same posterior without pre-clustering the queries: routed
 #     prediction sends each query to its nearest block centroid (Remark 2
 #     at serving time) — order/composition-invariant, no permutation
-#     bookkeeping (see examples/routed_traffic_serve.py for the server)
-routed_mean, _ = model.predict_routed_diag(ds.X_test)
+#     bookkeeping. Building the plan explicitly exposes the serving policy
+#     (bucket ladder, overflow-executable ladder, cached per-block C^-1);
+#     see examples/routed_traffic_serve.py for the server on top of it.
+plan = model.plan(api.ServeSpec(routed=True, max_batch=256,
+                                cached_cinv=True))
+routed_mean, _ = plan.routed_diag(ds.X_test)
 
 # 6. compare with the exact O(n^3) full GP (also through the registry)
 exact_model = api.fit("fgp", kfn, params, ds.X, ds.y)

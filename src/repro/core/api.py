@@ -1,4 +1,4 @@
-"""Unified GP method API: ``fit -> PosteriorState -> predict_batch``.
+"""Unified GP method API: ``fit -> PosteriorState -> plan -> serve``.
 
 The paper's real-time claim rests on amortization: everything that is
 O((|D|/M)^3) or O(|S|^3) happens ONCE at fit time and is cached in a
@@ -7,17 +7,35 @@ jits, shards, checkpoints, and hot-swaps); a repeated query then costs only
 the cross-covariances against the cached factors — O(|U||S| + |S|^2) for the
 summary methods instead of re-running the local Cholesky pipeline.
 
-Three layers:
+Serving is TWO-phase (the plan/execute split):
+
+* phase 1 — ``GPMethod.plan(kfn, params, state, spec) -> ServePlan``: a
+  ``ServeSpec`` declares every per-deployment serving decision ONCE (kernel
+  spec, query tile, bucket ladder, routed dispatch, overflow-executable
+  ladder, backend caches, dtype policy), and the plan owns what was
+  precompiled for that state: jitted executables per bucket (and, for
+  routed pPIC, per overflow-group count) plus backend caches such as the
+  per-block ``C⁻¹`` that turns the per-flush batched triangular solve into
+  a batched matmul. ``plan.rebind(state)`` hot-swaps the posterior while
+  REUSING every executable (zero recompilation when the state keeps its
+  treedef/shapes) — the serving fleet's assimilate/retire path.
+* phase 2 — ``plan.diag(U)`` / ``plan.routed_diag(U)`` / ``plan.full(U)``:
+  the only predict entry points serving uses. ``FittedGP.predict*`` and
+  ``launch.gp_serve.GPServer`` are thin clients of a plan; the legacy
+  per-call ``GPMethod.predict*(kfn, params, state, U, tile=...)`` callables
+  survive as deprecated shims that build a default-spec plan.
+
+Three structural layers below the plans:
 
 * per-method states   — ``FGPState`` / ``PITCState`` / ``PICState`` /
   ``PICFState``, defined here so core modules, runners, serving, and
   checkpointing all agree on the cached representation;
-* ``GPMethod``        — (name, fit, predict, predict_diag) registered by each
-  core module at import; ``get``/``names`` look methods up by string, which
-  is what examples/benchmarks/serving use instead of hand-wired plumbing;
+* ``GPMethod``        — (name, fit, predict impls, plan builder) registered
+  by each core module at import; ``get``/``names`` look methods up by
+  string, which is what examples/benchmarks/serving use;
 * ``FittedGP``        — convenience pairing of (method, kfn, params, state)
-  with ``predict``/``predict_diag``/``with_state`` (hot-swap after a
-  ``StateStore`` assimilate/retire).
+  with plan-backed ``predict``/``predict_diag`` and ``with_state`` (which
+  rebinds any already-built plans).
 
 Fit is runner-agnostic: the summary/factor construction goes through
 ``parallel.runner.Runner.map``, so ``VmapRunner`` and ``ShardMapRunner``
@@ -29,15 +47,19 @@ streaming assimilation, machine retirement, and checkpointing — a cold fit
 is just ``init_store(...).to_state()``, and every later mutation reuses the
 already-paid O(b³)/O(|S|³) work (``core/online.py`` for pPITC/pPIC,
 ``core/picf.py`` for the ICF factor). ``core/serialize.py`` persists every
-registered state with a versioned schema so serving fleets can checkpoint,
-restore, and replicate posteriors.
+registered state — and the stores themselves — with versioned schemas so
+serving fleets can checkpoint, restore, replicate, and keep assimilating.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
 
 import jax
+import numpy as np
+
+from repro.parallel.runner import ROUTED_ALPHA
 
 
 # ---------------------------------------------------------------------------
@@ -142,45 +164,508 @@ def check_machine_index(n_machines: int, machine: int) -> None:
 
 
 # ---------------------------------------------------------------------------
+# ServeSpec — phase 1's input: every per-deployment serving decision, once.
+# ---------------------------------------------------------------------------
+
+def default_buckets(max_batch: int, *, min_bucket: int = 8,
+                    block_q: int = 1) -> tuple[int, ...]:
+    """Powers of two from min_bucket up, capped by max_batch (inclusive),
+    each rounded up to a multiple of ``block_q``.
+
+    ``block_q`` is the Pallas serving kernel's query-tile size: emitting
+    bucket sizes on tile boundaries means the jitted predict's padded batch
+    IS the kernel grid — no second pad inside the kernel dispatch (the
+    fused ``xcov_diag`` and the two-bucket routed scatter both consume the
+    same alignment). The bare default 1 keeps direct calls' ladders ending
+    exactly at max_batch; powers of two >= 8 are already 8-aligned, so the
+    historical ladder is unchanged under the server default block_q=8.
+
+    Ladder invariants (regression-tested exhaustively in
+    tests/test_api_state.py and tests/test_plan.py):
+
+    * covering — the top bucket is >= max_batch even when ``max_batch <
+      min_bucket`` or ``max_batch`` is not tile-aligned (the top entry is
+      ``max_batch`` rounded UP to the tile, never truncated down);
+    * sorted and duplicate-free — a duplicate bucket would compile the same
+      executable twice and skew padding stats, so the ladder is squeezed
+      through ``dict.fromkeys`` regardless of how the loop, the rounding,
+      and the trailing ``max_batch`` append interact;
+    * validated — non-positive ``max_batch``/``min_bucket``/``block_q``
+      raise instead of emitting a 0-bucket or looping forever
+      (``min_bucket=0`` used to hang the doubling loop).
+    """
+    if max_batch < 1 or min_bucket < 1 or block_q < 1:
+        raise ValueError(
+            f"default_buckets needs positive sizes; got max_batch="
+            f"{max_batch}, min_bucket={min_bucket}, block_q={block_q}")
+    align = lambda v: -(-v // block_q) * block_q
+    sizes = []
+    b = min_bucket
+    while b < max_batch:
+        sizes.append(align(b))
+        b *= 2
+    sizes.append(align(max_batch))
+    return tuple(dict.fromkeys(sizes))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Frozen per-deployment serving policy — phase 1's single input.
+
+    Everything ``predict_diag``/``predict_routed_diag`` used to re-decide
+    per call (ad-hoc ``tile=`` kwargs, ``KernelSpec`` threading, server-side
+    bucket ladders) is declared here once; ``GPMethod.plan`` turns it into a
+    ``ServePlan`` whose executables and caches realize the policy.
+
+    * ``kernel``   — a ``cov.KernelSpec`` overriding the fit-time kernel
+      callable (how cross-covariances are built: dense jnp vs Pallas vs the
+      fused ``xcov_diag``); ``None`` serves with the kernel the plan was
+      built with.
+    * ``block_q``  — serving query-tile size. Resolution order: this field,
+      then the kernel's declared ``block_q``, then the f32 sublane (8).
+      Bucket ladders AND the routed scatter's capacity both land on this
+      boundary.
+    * ``max_batch`` / ``buckets`` / ``min_bucket`` — the bucket ladder.
+      Explicit ``buckets`` win; otherwise ``default_buckets(max_batch,
+      min_bucket, block_q)``; with NEITHER declared the plan serves every
+      batch at its exact size (identity bucketing — the legacy direct-call
+      behavior, bitwise; the PIC family's positional path assigns queries
+      to blocks by batch position, so padding is a posterior-visible
+      decision the spec must own, not a silent default). Oversized batches
+      round up to a multiple of the top bucket (never under-covered).
+    * ``routed``   — serve through the batch-composition-invariant
+      centroid-routed path (PIC family only); ``GPServer`` consumes this.
+    * ``alpha``    — routed main-bucket capacity multiplier (headroom vs
+      skew, see ``runner.scatter_two_bucket``).
+    * ``max_overflow_groups`` — bounds the routed overflow-executable
+      ladder: flush-time group counts snap up within {0, 1, 2, 4, ...};
+      a demand above this cap runs the full worst-case-G program instead of
+      compiling a dedicated one. ``None`` = the full power-of-two ladder.
+    * ``cached_cinv`` — precompute per-block ``C⁻¹ = (C_L C_Lᵀ)⁻¹`` at plan
+      build so the per-flush batched triangular solve becomes ONE batched
+      matmul (pays where batched trsm bills per program — XLA-CPU, small-RHS
+      TPU). Off by default: the matmul takes a different float path, and the
+      default plan is bitwise-faithful to the legacy trsm serving path.
+    * ``dtype``    — query dtype policy: ``"preserve"`` (serve in whatever
+      dtype queries arrive, the legacy behavior), ``"state"`` (cast queries
+      to the state's dtype so one executable serves mixed-precision
+      callers), ``"float32"``.
+
+    Frozen/hashable: a spec is a cache key (``FittedGP`` memoizes one plan
+    per spec) and safe to close over in jitted code.
+    """
+    kernel: Any = None
+    block_q: int | None = None
+    max_batch: int | None = None
+    buckets: tuple[int, ...] | None = None
+    min_bucket: int = 8
+    routed: bool = False
+    alpha: int = ROUTED_ALPHA
+    max_overflow_groups: int | None = None
+    cached_cinv: bool = False
+    dtype: str = "preserve"
+
+    def __post_init__(self):
+        # fail at construction, not deep inside routed_capacity at flush
+        # time (alpha=0 would divide by zero there; alpha<0 a garbage
+        # layout; the pad-packing invariant M*cap >= bucket needs alpha>=1)
+        if self.alpha < 1:
+            raise ValueError(f"ServeSpec.alpha must be >= 1; got "
+                             f"{self.alpha}")
+        if self.max_overflow_groups is not None \
+                and self.max_overflow_groups < 0:
+            raise ValueError(f"ServeSpec.max_overflow_groups must be >= 0; "
+                             f"got {self.max_overflow_groups}")
+        if self.cached_cinv and not self.routed:
+            # the C^-1 cache is consumed by the routed flush executables
+            # only; building it for a diag-only plan would pay O(M b^3)
+            # per rebind for zero effect
+            raise ValueError(
+                "ServeSpec(cached_cinv=True) serves the routed flush path; "
+                "set routed=True as well")
+
+    def resolve_kfn(self, kfn: Callable) -> Callable:
+        served = self.kernel if self.kernel is not None else kfn
+        if self.block_q is not None:
+            from repro.core import covariance as cov
+            if isinstance(served, cov.KernelSpec) and \
+                    served.block_q != self.block_q:
+                # the spec's tile overrides the kernel's: the fused
+                # xcov_diag dispatch reads the KernelSpec's block_q, and a
+                # mismatch would re-pick a tile and pad the bucket AGAIN
+                # inside the dispatch — the second pad the bucket-ladder
+                # alignment exists to avoid
+                served = dataclasses.replace(served, block_q=self.block_q)
+        return served
+
+    def resolve_block_q(self, kfn: Callable) -> int:
+        if self.block_q is not None and self.block_q < 1:
+            raise ValueError(f"ServeSpec.block_q must be a positive tile "
+                             f"size; got {self.block_q}")
+        kfn = self.resolve_kfn(kfn)
+        return self.block_q or getattr(kfn, "block_q", None) or 8
+
+    def resolve_buckets(self, kfn: Callable) -> tuple[int, ...] | None:
+        """The ladder, or ``None`` for identity bucketing (no padding)."""
+        if self.buckets is not None:
+            buckets = tuple(sorted(dict.fromkeys(self.buckets)))
+            if not buckets or buckets[0] < 1:
+                raise ValueError(f"ServeSpec.buckets must be positive; got "
+                                 f"{self.buckets}")
+            if self.max_batch is not None and buckets[-1] < self.max_batch:
+                raise ValueError(
+                    f"largest bucket {buckets[-1]} < max_batch "
+                    f"{self.max_batch}: the ladder would under-cover the "
+                    f"serving queue")
+            return buckets
+        if self.max_batch is None:
+            return None
+        return default_buckets(self.max_batch, min_bucket=self.min_bucket,
+                               block_q=self.resolve_block_q(kfn))
+
+
+# ---------------------------------------------------------------------------
+# ServePlan — phase 1's output: executables + caches, owned per state.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanStats:
+    """Shared across ``rebind`` generations — the executable cache and its
+    counters describe the plan LINEAGE, which is what the zero-recompile
+    guarantee is about (tests probe ``n_traces`` across hot-swaps)."""
+    n_traces: int = 0          # jit traces across all executables
+    n_diag_batches: int = 0
+    n_routed_batches: int = 0
+    n_full_batches: int = 0
+    n_padded_rows: int = 0
+    n_g0_batches: int = 0      # routed flushes served by the G=0 program
+    last_g: int | None = None  # overflow-group count of the last routed call
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """Executable serving program for ONE (method, kernel, spec, state).
+
+    Owns (a) the resolved serving policy (kernel callable, tile, bucket
+    ladder), (b) jitted executables, created once per entry point and
+    reused across every ``rebind`` (the executable cache dict is shared by
+    reference), and (c) ``caches`` — method-specific precomputed backend
+    state (``None`` here; pPIC's plan carries per-block ``C⁻¹``) that is
+    passed to executables as a TRACED argument, so refreshing it on rebind
+    never recompiles.
+
+    Entry points (phase 2):
+
+    * ``diag(U)``        — (mean, var) for any |U|; host-side pad to the
+      bucket ladder, one jitted dispatch, trim;
+    * ``routed_diag(U)`` — the batch-composition-invariant path (PIC
+      family; raises here);
+    * ``full(U)``        — the method's native posterior (dense/block
+      covariance view), un-padded (the covariance shape is the point);
+    * ``rebind(state)``  — same plan, new posterior: every executable is
+      reused, so a same-shape hot-swap costs zero recompilation and a
+      grown block axis costs exactly one re-trace per entry point.
+
+    Padding/staging is host-side NumPy throughout (device-stage a
+    microbatch and every distinct queue length eagerly compiles a fresh
+    stack/pad kernel — the tail-latency lesson baked into GPServer).
+    """
+    method: "GPMethod"
+    kfn: Callable
+    params: dict
+    state: Any
+    spec: ServeSpec
+    block_q: int
+    buckets: tuple[int, ...]
+    caches: Any = None
+    stats: PlanStats = dataclasses.field(default_factory=PlanStats)
+    _exec: dict = dataclasses.field(default_factory=dict)
+
+    # -- ladder -------------------------------------------------------------
+
+    def bucket_for(self, u: int) -> int:
+        if self.buckets is None:        # identity bucketing: exact batches
+            return u
+        for b in self.buckets:
+            if b >= u:
+                return b
+        big = self.buckets[-1]          # oversized: multiple of the top
+        return -(-u // big) * big
+
+    def _staged(self, U):
+        """Apply the spec's dtype policy. Zero-copy under ``"preserve"``
+        (device arrays stay on device; ``plan.diag``/``plan.full`` remain
+        jax-traceable when no bucket padding fires), device-/trace-side
+        cast for jax values otherwise."""
+        if self.spec.dtype == "preserve":
+            return U
+        if self.spec.dtype == "state":
+            target = jax.tree.leaves(self.state)[0].dtype
+        elif self.spec.dtype == "float32":
+            target = np.float32
+        else:
+            raise ValueError(
+                f"unknown ServeSpec.dtype policy {self.spec.dtype!r}; "
+                f"expected 'preserve', 'state', or 'float32'")
+        if isinstance(U, (np.ndarray, list, tuple)):
+            return np.asarray(U, dtype=target)
+        return U.astype(target)          # jax array / tracer: no host trip
+
+    def _padded(self, U) -> tuple[Any, int]:
+        U = self._staged(U)
+        u = U.shape[0]
+        bucket = self.bucket_for(u)
+        if bucket == u:
+            return U, u
+        # padding is host-side serving staging by design (an eager device
+        # pad would compile once per distinct batch length — the serving
+        # tail-latency failure mode); bucket ladders are a serving policy,
+        # so a padded path inside jax transforms is unsupported
+        Un = np.asarray(U)
+        buf = np.zeros((bucket,) + Un.shape[1:], Un.dtype)
+        buf[:u] = Un
+        self.stats.n_padded_rows += bucket - u
+        return buf, u
+
+    # -- executables ----------------------------------------------------------
+
+    def _jitted(self, key: str, build: Callable[[], Callable]) -> Callable:
+        """One jitted executable per key, created lazily, shared across
+        rebinds. ``build`` returns the python callable to jit; a trace
+        counter rides inside it so the lifecycle tests can assert the
+        zero-recompile hot-swap contract."""
+        fn = self._exec.get(key)
+        if fn is None:
+            inner = build()
+            stats = self.stats
+
+            def counted(*args):
+                stats.n_traces += 1
+                return inner(*args)
+
+            fn = self._exec[key] = jax.jit(counted)
+        return fn
+
+    def _diag_exec(self) -> Callable:
+        impl, kfn = self.method.predict_diag_fn, self.kfn
+        return self._jitted(
+            "diag", lambda: lambda params, state, caches, U:
+                impl(kfn, params, state, U))
+
+    def _full_exec(self) -> Callable:
+        impl, kfn = self.method.predict_fn, self.kfn
+        return self._jitted(
+            "full", lambda: lambda params, state, caches, U:
+                impl(kfn, params, state, U))
+
+    # -- phase 2 entry points -------------------------------------------------
+
+    def diag(self, U) -> tuple[jax.Array, jax.Array]:
+        """(mean, var) over a (u, d) batch — THE serving hot path."""
+        Up, u = self._padded(U)
+        mean, var = self._diag_exec()(self.params, self.state, self.caches,
+                                      Up)
+        self.stats.n_diag_batches += 1
+        return mean[:u], var[:u]
+
+    def routed_diag(self, U):
+        """Generic routed path: the method's raw routed impl, jitted with
+        the spec's tile. Methods with a specialized plan (pPIC/PIC's
+        ``PICServePlan``) override this with backend caches and the
+        overflow-executable ladder; methods with no routed impl raise —
+        their posterior is composition-invariant already, use ``diag``."""
+        impl, kfn, tile = (self.method.predict_routed_diag_fn, self.kfn,
+                           self.block_q)
+        if impl is None:
+            raise ValueError(
+                f"method {self.method.name!r} has no routed serving "
+                f"program; its posterior does not depend on query-block "
+                f"assignment — use plan.diag")
+        Up, u = self._padded(U)
+        fn = self._jitted(
+            "routed", lambda: lambda params, state, caches, U:
+                impl(kfn, params, state, U, tile=tile))
+        mean, var = fn(self.params, self.state, self.caches, Up)
+        self.stats.n_routed_batches += 1
+        self.stats.last_g = None
+        return mean[:u], var[:u]
+
+    def full(self, U):
+        """The method's native posterior (mean + covariance view). Queries
+        are NOT bucket-padded — the covariance block shape is the output."""
+        post = self._full_exec()(self.params, self.state, self.caches,
+                                 self._staged(U))
+        self.stats.n_full_batches += 1
+        return post
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def rebind(self, state) -> "ServePlan":
+        """Hot-swap the posterior: a new plan over ``state`` sharing this
+        plan's executables and stats. Same treedef + leaf shapes -> every
+        compiled program is reused (zero recompilation, probe-tested);
+        changed shapes cost one re-trace per entry point on next use."""
+        return dataclasses.replace(self, state=state,
+                                   caches=self._rebuild_caches(state))
+
+    def _rebuild_caches(self, state):
+        """Recompute backend caches for a new state (no-op here)."""
+        return None
+
+    def warmup(self, d: int, *, dtype=np.float32) -> "ServePlan":
+        """Compile every executable the serving loop can hit, up front
+        (steady-state serving: one-time XLA compiles must not masquerade as
+        tail latency): the diag program per bucket — or, for a routed spec,
+        the routed program per bucket (specialized plans extend this to
+        their whole overflow-executable ladder). ``d`` is the query feature
+        dimension; a no-op under identity bucketing (no finite ladder)."""
+        routed = (self.spec.routed
+                  and self.method.predict_routed_diag_fn is not None)
+        for b in self.buckets or ():
+            U0 = np.zeros((b, d), dtype)
+            jax.block_until_ready(
+                (self.routed_diag(U0) if routed else self.diag(U0))[0])
+        return self
+
+
+# ---------------------------------------------------------------------------
 # Method registry.
 # ---------------------------------------------------------------------------
+
+class PlanDeprecationWarning(DeprecationWarning):
+    """Raised by the legacy per-call ``GPMethod.predict*`` shims. First-party
+    code must serve through a ``ServePlan`` (CI runs the serving suites with
+    this warning escalated to an error)."""
+
+
+_DEFAULT_SPEC = ServeSpec()
+
 
 @dataclasses.dataclass(frozen=True)
 class GPMethod:
     """One GP regression method behind the uniform state API.
 
     ``fit(kfn, params, X, y, **kw) -> state`` where ``kw`` is the subset of
-    (S=, M=, rank=, runner=) the method needs; ``predict`` returns the
-    method's native posterior (GPPosterior or ParallelPosterior);
-    ``predict_diag`` always returns a (mean, var) pair of (u,) arrays and
-    accepts query batches of any size (block methods pad internally).
+    (S=, M=, rank=, runner=) the method needs. The ``*_fn`` fields are the
+    RAW prediction implementations (what plans jit):
 
-    ``predict_routed_diag`` (optional) is the batch-composition-invariant
-    serving path: each query is assigned to its nearest-centroid block
-    (Remark 2) instead of positionally, so a query's (mean, var) depends only
-    on the query point and the fitted state — never on what else happened to
-    arrive in the same microbatch. Implementations accept an optional
-    ``tile=`` keyword (serving-kernel query-tile size) that the routed
-    scatter aligns its bucket widths to; ``GPServer(routed=True)`` threads
-    its ``block_q`` through it. Methods whose posterior is already
-    query-independent of the block layout (fgp/pitc/ppitc/picf) leave it
-    ``None``: ``FittedGP.predict_routed_diag`` raises for them and
-    ``GPServer(routed=True)`` rejects them at construction — their
-    ``predict_diag`` already has the invariance routing buys.
+    * ``predict_fn(kfn, params, state, U)``      -> native posterior;
+    * ``predict_diag_fn(kfn, params, state, U)`` -> (mean, var) vectors;
+    * ``predict_routed_diag_fn(..., tile=)``     -> the batch-composition-
+      invariant path (PIC family; ``None`` for methods whose posterior is
+      already independent of query-block assignment — fgp/pitc/ppitc/picf
+      get the invariance for free and ``GPServer(routed=True)`` rejects
+      them at construction);
+    * ``plan_fn(method, kfn, params, state, spec)`` — method-owned
+      ``ServePlan`` factory (``None`` -> the generic plan). pPIC/PIC
+      install a plan carrying per-block ``C⁻¹`` caches and the
+      per-overflow-group-count executable ladder.
+    * ``init_store`` (optional) — the incremental-state entry point:
+      ``init_store(kfn, params, X, y, **kw) -> StateStore`` with the same
+      keyword subset as ``fit``. Methods without an incremental algebra
+      (``fgp``) leave it ``None``; for the summary/factor methods ``fit``
+      IS ``init_store(...).to_state()``.
 
-    ``init_store`` (optional) is the incremental-state entry point:
-    ``init_store(kfn, params, X, y, **kw) -> StateStore`` with the same
-    keyword subset as ``fit``. Methods without an incremental algebra
-    (``fgp`` — the exact Cholesky has no cheap update) leave it ``None``;
-    for the summary/factor methods ``fit`` IS ``init_store(...).to_state()``
-    so cold fits and streamed states share one code path.
+    The bare-name attributes ``predict`` / ``predict_diag`` /
+    ``predict_routed_diag`` remain callable with the legacy per-call
+    signature ``(kfn, params, state, U, **kw)`` but are DEPRECATED shims:
+    they warn (``PlanDeprecationWarning``), build (and memoize) a
+    default-spec plan, and execute through it. Migrate to
+    ``method.plan(...)`` / ``FittedGP`` / ``GPServer``.
     """
     name: str
     fit: Callable[..., Any]
-    predict: Callable[..., Any]        # (kfn, params, state, U) -> posterior
-    predict_diag: Callable[..., Any]   # (kfn, params, state, U) -> (mean, var)
-    predict_routed_diag: Callable[..., Any] | None = None
+    predict_fn: Callable[..., Any]
+    predict_diag_fn: Callable[..., Any]
+    predict_routed_diag_fn: Callable[..., Any] | None = None
     init_store: Callable[..., "StateStore"] | None = None
+    plan_fn: Callable[..., ServePlan] | None = None
+
+    # -- phase 1 --------------------------------------------------------------
+
+    def plan(self, kfn, params, state, spec: ServeSpec | None = None
+             ) -> ServePlan:
+        """Build the serving program for ``state`` under ``spec``."""
+        spec = spec if spec is not None else _DEFAULT_SPEC
+        if spec.cached_cinv and self.plan_fn is None:
+            raise ValueError(
+                f"ServeSpec(cached_cinv=True) but method {self.name!r} has "
+                f"no backend-cache plan (only the PIC family serves from "
+                f"per-block C factors)")
+        if self.plan_fn is not None:
+            return self.plan_fn(self, kfn, params, state, spec)
+        served = spec.resolve_kfn(kfn)
+        return ServePlan(self, served, params, state, spec,
+                         spec.resolve_block_q(kfn),
+                         spec.resolve_buckets(kfn))
+
+    # -- deprecated per-call shims (legacy surface) ---------------------------
+
+    def _shim_plan(self, kfn, params, state, spec: ServeSpec) -> ServePlan:
+        """Memoized default-spec plan for the legacy shims: repeated legacy
+        calls reuse one executable cache instead of re-jitting per call
+        (the plan is rebound per call — free, and jit's per-shape cache
+        absorbs state-shape drift). Cached entries are STRIPPED of
+        params/state/caches so the memo never pins a caller's posterior
+        beyond the call that supplied it."""
+        try:
+            key = (self.name, kfn, spec)
+            hash(key)
+        except TypeError:
+            key = (self.name, id(kfn), spec)
+        plan = _SHIM_PLANS.get(key)
+        if plan is None:
+            plan = self.plan(kfn, params, state, spec)
+            _SHIM_PLANS[key] = dataclasses.replace(plan, params=None,
+                                                   state=None, caches=None)
+            return plan
+        return dataclasses.replace(plan, params=params, state=state,
+                                   caches=plan._rebuild_caches(state))
+
+    def _deprecated(self, kind: str, impl_missing_ok: bool = False):
+        def shim(kfn, params, state, U, **kw):
+            warnings.warn(
+                f"GPMethod.{kind}(kfn, params, state, U, ...) is "
+                f"deprecated: build a serving plan once — "
+                f"method.plan(kfn, params, state, api.ServeSpec(...)) — "
+                f"and call plan.{_SHIM_TARGET[kind]}(U)",
+                PlanDeprecationWarning, stacklevel=2)
+            spec = _DEFAULT_SPEC
+            tile = kw.pop("tile", None)
+            if tile is not None:
+                spec = dataclasses.replace(spec, block_q=tile)
+            alpha = kw.pop("alpha", None)   # legacy routed headroom kwarg
+            if alpha is not None:
+                spec = dataclasses.replace(spec, alpha=alpha)
+            if kw:
+                raise TypeError(f"unexpected legacy kwargs {sorted(kw)}")
+            plan = self._shim_plan(kfn, params, state, spec)
+            return getattr(plan, _SHIM_TARGET[kind])(U)
+        shim.__name__ = f"{self.name}_{kind}_shim"
+        return shim
+
+    @property
+    def predict(self):
+        """DEPRECATED per-call surface; use ``plan(...).full``."""
+        return self._deprecated("predict")
+
+    @property
+    def predict_diag(self):
+        """DEPRECATED per-call surface; use ``plan(...).diag``."""
+        return self._deprecated("predict_diag")
+
+    @property
+    def predict_routed_diag(self):
+        """DEPRECATED per-call surface; use ``plan(...).routed_diag``.
+        ``None`` when the method has no routed path (registry contract)."""
+        if self.predict_routed_diag_fn is None:
+            return None
+        return self._deprecated("predict_routed_diag")
+
+
+_SHIM_TARGET = {"predict": "full", "predict_diag": "diag",
+                "predict_routed_diag": "routed_diag"}
+_SHIM_PLANS: dict = {}
 
 
 REGISTRY: dict[str, GPMethod] = {}
@@ -213,34 +698,50 @@ def names() -> list[str]:
 class FittedGP:
     """A fitted model: method + kernel + hyperparameters + cached state.
 
-    ``state`` is the only field that changes across online updates, so
-    serving jits ``predict_diag(params, state, U)`` once and hot-swaps the
-    state pytree without recompiling (launch/gp_serve.py).
+    A thin client of the two-phase API: every predict goes through a
+    memoized ``ServePlan`` (one per ``ServeSpec``), so repeated calls reuse
+    jitted executables and ``with_state`` (hot-swap after a ``StateStore``
+    assimilate/retire) REBINDS the existing plans instead of rebuilding —
+    zero recompilation when the state keeps its shapes.
     """
     method: GPMethod
     kfn: Callable
     params: dict
     state: Any
 
+    def plan(self, spec: ServeSpec | None = None) -> ServePlan:
+        """The serving program for this model under ``spec`` (memoized)."""
+        spec = spec if spec is not None else _DEFAULT_SPEC
+        plans = self.__dict__.setdefault("_plans", {})
+        if spec not in plans:
+            plans[spec] = self.method.plan(self.kfn, self.params, self.state,
+                                           spec)
+        return plans[spec]
+
     def predict(self, U: jax.Array):
-        return self.method.predict(self.kfn, self.params, self.state, U)
+        return self.plan().full(U)
 
     def predict_diag(self, U: jax.Array):
-        return self.method.predict_diag(self.kfn, self.params, self.state, U)
+        return self.plan().diag(U)
 
     def predict_routed_diag(self, U: jax.Array):
         """Centroid-routed (mean, var) — batch-composition-invariant."""
-        if self.method.predict_routed_diag is None:
+        if self.method.predict_routed_diag_fn is None:
             raise ValueError(
                 f"method {self.method.name!r} has no routed prediction path; "
                 f"its posterior does not depend on query-block assignment — "
                 f"use predict_diag")
-        return self.method.predict_routed_diag(self.kfn, self.params,
-                                               self.state, U)
+        return self.plan().routed_diag(U)
 
     def with_state(self, state) -> "FittedGP":
-        """Hot-swap the cached posterior (online assimilate/retire)."""
-        return dataclasses.replace(self, state=state)
+        """Hot-swap the cached posterior (online assimilate/retire); any
+        already-built plans are rebound, keeping their executables."""
+        new = dataclasses.replace(self, state=state)
+        plans = self.__dict__.get("_plans")
+        if plans:
+            new.__dict__["_plans"] = {sp: pl.rebind(state)
+                                      for sp, pl in plans.items()}
+        return new
 
 
 def _method_kwargs(S=None, M=None, rank=None, runner=None) -> dict:

@@ -188,10 +188,23 @@ class KernelSpec:
             block_q=self.block_q)
 
 
+_IMPLS = ("auto", "pallas", "pallas_interpret", "jnp")
+
+
 def make_spec(name: str = "se", *, impl: str = "auto", fused: bool = True,
               block_q: int | None = None) -> KernelSpec:
-    """Front door for the serving kernel-spec knob (README "Performance")."""
+    """Front door for the serving kernel-spec knob (README "Performance").
+
+    Validates eagerly: the spec's declared ``block_q`` becomes the serving
+    tile that bucket ladders and the routed scatter align to
+    (``api.ServeSpec.resolve_block_q``), so a non-positive tile must fail
+    here, not as a silent mis-aligned ladder at plan-build time."""
     make_kernel(name)            # validate eagerly
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown kernel impl {impl!r}; have {_IMPLS}")
+    if block_q is not None and block_q < 1:
+        raise ValueError(f"block_q must be a positive tile size; got "
+                         f"{block_q}")
     return KernelSpec(name, impl, fused, block_q)
 
 

@@ -107,4 +107,5 @@ def _mean(mean_fn, X: jax.Array, dtype) -> jax.Array:
     return mean_fn(X)
 
 
-api.register(api.GPMethod("fgp", fit, predict_batch, predict_batch_diag))
+api.register(api.GPMethod("fgp", fit, predict_fn=predict_batch,
+                          predict_diag_fn=predict_batch_diag))

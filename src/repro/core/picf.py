@@ -400,5 +400,6 @@ def init_picf_store(kfn, params, X, y, *, rank: int,
                      local.pivots[0], local.Lp[0], alive, Phi_L, yF)
 
 
-api.register(api.GPMethod("picf", fit, predict_batch, predict_batch_diag,
+api.register(api.GPMethod("picf", fit, predict_fn=predict_batch,
+                          predict_diag_fn=predict_batch_diag,
                           init_store=init_picf_store))

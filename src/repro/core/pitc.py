@@ -218,8 +218,17 @@ def _pic_init_store(kfn, params, X, y, *, S, M: int):
                                  runner=VmapRunner(M=M))
 
 
-api.register(api.GPMethod("pitc", fit, _pitc_predict, _pitc_predict_diag,
+def _pic_plan(method, kfn, params, state, spec):
+    """Centralized PIC serves through pPIC's plan (same PICState, same
+    backend caches and overflow-executable ladder)."""
+    from repro.core import ppic
+    return ppic.make_plan(method, kfn, params, state, spec)
+
+
+api.register(api.GPMethod("pitc", fit, predict_fn=_pitc_predict,
+                          predict_diag_fn=_pitc_predict_diag,
                           init_store=_pitc_init_store))
-api.register(api.GPMethod("pic", fit_pic, _pic_predict, _pic_predict_diag,
-                          _pic_predict_routed_diag,
-                          init_store=_pic_init_store))
+api.register(api.GPMethod("pic", fit_pic, predict_fn=_pic_predict,
+                          predict_diag_fn=_pic_predict_diag,
+                          predict_routed_diag_fn=_pic_predict_routed_diag,
+                          init_store=_pic_init_store, plan_fn=_pic_plan))

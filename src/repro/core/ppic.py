@@ -32,10 +32,13 @@ literal PIC oracle in tests/test_equivalence.py.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import api
+from repro.core import api, clustering
 from repro.core import covariance as cov
 from repro.core import linalg
 from repro.core.gp import GPPosterior
@@ -43,7 +46,8 @@ from repro.core.ppitc import (GlobalSummary, LocalSummary, ParallelPosterior,
                               global_summary, local_summary)
 from repro.parallel.runner import (ROUTED_ALPHA, Runner, gather_by_block,
                                    gather_two_bucket, pad_blocks,
-                                   scatter_by_block, scatter_two_bucket)
+                                   routed_capacity, scatter_by_block,
+                                   scatter_two_bucket)
 
 
 def machine_step(kfn, params, S, Xm, ym, Um, *, axis_name):
@@ -222,6 +226,87 @@ def route_queries(state: api.PICState, U) -> jax.Array:
     return jnp.argmin(d2, axis=1)
 
 
+def _block_posterior_diag_cinv(kfn, params, state: api.PICState, Um,
+                               m_fields, Cinv_m):
+    """``_block_posterior_diag`` with the per-block solve served from a
+    PRECOMPUTED dense inverse: ``K_{U_m D_m} C⁻¹`` is one row-major gemm
+    instead of the two-sided batched triangular solve.
+
+    This is the plan-owned backend cache (``ServeSpec(cached_cinv=True)``):
+    XLA-CPU (and small-RHS TPU) batched trsm bills per PROGRAM almost
+    independently of the RHS width, so the routed layout's M+G solve
+    programs cost more than their row saving — a batched matmul scales with
+    the RHS width on every backend. Different float path than the trsm
+    (same math, inverse applied multiplicatively), hence opt-in: the
+    default serving plan stays bitwise-faithful to the legacy path.
+    Row-major throughout for the same composition-invariance reasons as
+    ``_block_posterior_diag``.
+    """
+    Xm, ym, Ksd, C_L, Wy, ydot, beta, B = m_fields
+    Kus = kfn(params, Um, state.S)
+    Kud = kfn(params, Um, Xm)
+    rowdot = lambda A, v: jnp.sum(A * v[None, :], axis=1)
+    ydot_u = rowdot(Kud, Wy)
+    WdT = Kud @ Cinv_m                                 # K_{U_m D_m} C^{-1}
+    Sdot_us = WdT @ Ksd.T                              # (u, s)
+    Phi = Kus + Kus @ B - Sdot_us
+    mean = rowdot(Phi, state.alpha) - rowdot(Kus, beta) + ydot_u
+    var = (cov.kdiag(kfn, params, Um)
+           - jnp.sum(Phi * linalg.chol_solve_right(state.Kss_L, Kus), 1)
+           + jnp.sum(Phi * linalg.chol_solve_right(state.Sdd_L, Phi), 1)
+           + jnp.sum(Kus * linalg.chol_solve_right(state.Kss_L, Sdot_us), 1)
+           - jnp.sum(Kud * WdT, 1))
+    return mean, var
+
+
+@jax.jit
+def cinv_blocks(C_L: jax.Array) -> jax.Array:
+    """(M, b, b) dense symmetric inverses ``(C_L C_Lᵀ)⁻¹`` per block — the
+    one-time plan-build cost behind ``ServeSpec(cached_cinv=True)``; every
+    routed flush thereafter multiplies instead of solving."""
+    eye = jnp.eye(C_L.shape[-1], dtype=C_L.dtype)
+    return jax.vmap(lambda L: linalg.chol_solve(L, eye))(C_L)
+
+
+def _routed_diag_program(kfn, params, state: api.PICState, Cinv, U,
+                         assign=None, *, alpha: int, tile: int,
+                         n_groups: int | None):
+    """The routed serving program body: two-bucket scatter -> per-block
+    posterior -> gather, parameterized by the overflow-group count and the
+    optional C⁻¹ backend cache. ``predict_routed_diag`` is this program at
+    its worst-case defaults (assignment derived on device); ``PICServePlan``
+    jits one instance per selected group count (lazy overflow dispatch) and
+    passes its host-computed ``assign`` in as a traced argument — the SAME
+    assignment that sized the group count, so the scatter can never see a
+    row the selection did not provision for (a device-side re-derivation
+    could flip a near-boundary argmin across float paths and silently drop
+    the flipped row past the chosen capacity)."""
+    M = state.Xb.shape[0]
+    if assign is None:
+        assign = route_queries(state, U)
+    lay = scatter_two_bucket(U, assign, M, alpha=alpha, tile=tile,
+                             max_groups=n_groups)
+    if Cinv is None:
+        one = lambda Um, *mf: _block_posterior_diag(kfn, params, state,
+                                                    Um, mf)
+        means, vars_ = jax.vmap(one)(lay.Xb, *_block_fields(state))
+    else:
+        one = lambda Um, Ci, *mf: _block_posterior_diag_cinv(
+            kfn, params, state, Um, mf, Ci)
+        means, vars_ = jax.vmap(one)(lay.Xb, Cinv, *_block_fields(state))
+    means_o = vars_o = None
+    if lay.Xo is not None:
+        # overflow groups: gather the owning block's cached factors per
+        # group (dynamic indices, static shapes — jit-safe)
+        mf_o = tuple(a[lay.o_blk] for a in _block_fields(state))
+        if Cinv is None:
+            means_o, vars_o = jax.vmap(one)(lay.Xo, *mf_o)
+        else:
+            means_o, vars_o = jax.vmap(one)(lay.Xo, Cinv[lay.o_blk], *mf_o)
+    return (gather_two_bucket(means, means_o, lay),
+            gather_two_bucket(vars_, vars_o, lay))
+
+
 def predict_routed_diag(kfn, params, state: api.PICState, U, *,
                         alpha: int = ROUTED_ALPHA, tile: int | None = None):
     """Batch-composition-invariant (mean, var) for any |U|.
@@ -236,23 +321,15 @@ def predict_routed_diag(kfn, params, state: api.PICState, U, *,
     predictive equation is row-independent; tests/test_routing_equivalence).
 
     ``tile`` aligns the bucket width to the serving kernel's block_q so the
-    Pallas dispatch needs no second pad (launch/gp_serve.py threads it).
+    Pallas dispatch needs no second pad. This is the worst-case-G, no-cache
+    instance of the serving program; a ``PICServePlan`` additionally selects
+    smaller overflow programs from the flush occupancy and can serve the
+    per-block solve from cached C⁻¹ (``GPMethod.plan``).
     """
-    M = state.Xb.shape[0]
     if tile is None:   # a KernelSpec declares its serving tile; bare kfns: 1
         tile = getattr(kfn, "block_q", None) or 1
-    assign = route_queries(state, U)
-    lay = scatter_two_bucket(U, assign, M, alpha=alpha, tile=tile)
-    one = lambda Um, *mf: _block_posterior_diag(kfn, params, state, Um, mf)
-    means, vars_ = jax.vmap(one)(lay.Xb, *_block_fields(state))
-    means_o = vars_o = None
-    if lay.Xo is not None:
-        # overflow groups: gather the owning block's cached factors per
-        # group (dynamic indices, static shapes — jit-safe)
-        mf_o = tuple(a[lay.o_blk] for a in _block_fields(state))
-        means_o, vars_o = jax.vmap(one)(lay.Xo, *mf_o)
-    return (gather_two_bucket(means, means_o, lay),
-            gather_two_bucket(vars_, vars_o, lay))
+    return _routed_diag_program(kfn, params, state, None, U, None,
+                                alpha=alpha, tile=tile, n_groups=None)
 
 
 def predict_routed_diag_capacity(kfn, params, state: api.PICState, U):
@@ -303,6 +380,152 @@ def predict(kfn, params, S, X, y, U, runner: Runner) -> ParallelPosterior:
     return predict_blocks(kfn, params, state, U)
 
 
+# ---------------------------------------------------------------------------
+# PICServePlan — the PIC family's phase-1 serving program (api.GPMethod.plan).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PICServePlan(api.ServePlan):
+    """``api.ServePlan`` with the two PIC-specific assets the plan/execute
+    split exists for:
+
+    * backend caches — ``caches`` holds the per-block dense ``C⁻¹`` when
+      the spec asks for it (``cached_cinv=True``), passed to executables as
+      a traced argument and recomputed on ``rebind`` — so hot-swapping a
+      streamed state refreshes the cache with zero recompilation;
+    * a routed executable LADDER — one jitted program per overflow-group
+      count g ∈ {0, 1, 2, 4, ..., G_worst}, selected per flush from the
+      host-side occupancy: balanced traffic runs the G=0 program (main
+      bucket only — no overflow compute dispatched at all), mild skew runs
+      a 1-2 group program, and only adversarial skew pays the worst case.
+      The selection is EXACT (counts, not a guess): a row past the chosen
+      program's capacity would be silently dropped by the scatter, so the
+      plan never under-provisions.
+
+    Per-row posteriors are bitwise-identical across the ladder: group k's
+    rows run the same row-independent per-block program wherever the batch
+    composition lands them (property-tested in tests/test_plan.py).
+    """
+
+    def _rebuild_caches(self, state):
+        return cinv_blocks(state.C_L) if self.spec.cached_cinv else None
+
+    def _routed_exec(self, g: int):
+        kfn, alpha, tile = self.kfn, self.spec.alpha, self.block_q
+        return self._jitted(
+            ("routed", g), lambda: lambda params, state, caches, U, assign:
+                _routed_diag_program(kfn, params, state, caches, U, assign,
+                                     alpha=alpha, tile=tile, n_groups=g))
+
+    def routed_diag(self, U):
+        """Batch-composition-invariant (mean, var): pad to the bucket
+        ladder, route host-side, pick the overflow program from the
+        occupancy, dispatch.
+
+        The host-side nearest-centroid assignment of the STAGED padded
+        batch is authoritative for BOTH the group-count selection and the
+        device scatter (it is passed into the executable as a traced
+        argument): one float path, so the program the occupancy sized is
+        by construction sufficient for the rows the scatter places.
+
+        Pad rows are NOT routed by centroid — they are packed into blocks
+        with spare main-bucket capacity. Every row must land somewhere
+        (the scatter's drop semantics would otherwise demand provisioning
+        for them), but letting zeros route naturally would pile them onto
+        one block and drag partially-filled flushes — the deadline-trigger
+        common case — onto the worst-case overflow program. Spare capacity
+        always covers them (M·cap >= alpha·ceil(bucket/M)·M >= bucket for
+        alpha >= 1), pads sit positionally AFTER the real rows so they can
+        never displace a real row's (block, slot) placement, and their
+        outputs are trimmed — so overflow demand is the REAL rows' demand,
+        and balanced traffic runs G=0 regardless of padding."""
+        Up, u = self._padded(U)
+        assign, g = self._route(np.asarray(Up), u)
+        mean, var = self._routed_exec(g)(self.params, self.state,
+                                         self.caches, Up, assign)
+        self.stats.n_routed_batches += 1
+        self.stats.last_g = g
+        if g == 0:
+            self.stats.n_g0_batches += 1
+        return mean[:u], var[:u]
+
+    def _route(self, Up: np.ndarray, u: int) -> tuple[np.ndarray, int]:
+        """(assign, g) for a staged padded batch whose first ``u`` rows are
+        real — the ONE host-side routing decision behind ``routed_diag``
+        (and the bench's executable-level timings, which must provision
+        exactly what a real flush would)."""
+        M = int(self.state.Xb.shape[0])
+        assign = clustering.nearest_center_np(
+            Up[:u], np.asarray(self.state.centroids)).astype(np.int32)
+        counts = np.bincount(assign, minlength=M)
+        cap, G_full = routed_capacity(Up.shape[0], M, alpha=self.spec.alpha,
+                                      tile=self.block_q)
+        pad = Up.shape[0] - u
+        if pad:
+            spare = (cap - np.minimum(counts, cap)).astype(np.int64)
+            pad_assign = np.repeat(np.arange(M, dtype=np.int32),
+                                   spare)[:pad]
+            assert pad_assign.shape[0] == pad   # M*cap >= bucket invariant
+            assign = np.concatenate([assign, pad_assign])
+        g = 0
+        if G_full:
+            over = np.maximum(counts - cap, 0)
+            g = _snap_groups(int(np.sum(-(-over // cap))), G_full,
+                             self.spec.max_overflow_groups)
+        return assign, g
+
+    def warmup(self, d: int, *, dtype=np.float32) -> "PICServePlan":
+        """Pre-compile the FULL routed executable ladder per bucket — every
+        (bucket, g) program a flush can select — so g-selection never pays
+        a mid-serving compile (the p99 simulation in bench_serve_latency
+        charges real flush time to tickets and would see it)."""
+        if not self.spec.routed:
+            return super().warmup(d, dtype=dtype)
+        M = int(self.state.Xb.shape[0])
+        for b in self.buckets or ():
+            U0 = np.zeros((b, d), dtype)
+            _, G = routed_capacity(b, M, alpha=self.spec.alpha,
+                                   tile=self.block_q)
+            gs, g = {0, G}, 1
+            while g < G:                      # the _snap_groups ladder
+                gs.add(g)
+                g *= 2
+            if self.spec.max_overflow_groups is not None:
+                gs = {g for g in gs
+                      if g <= self.spec.max_overflow_groups} | {G}
+            a0 = np.zeros((b,), np.int32)
+            for g in sorted(gs):
+                jax.block_until_ready(self._routed_exec(g)(
+                    self.params, self.state, self.caches, U0, a0)[0])
+        return self
+
+
+def _snap_groups(needed: int, G_full: int, max_groups: int | None) -> int:
+    """Snap an exact group demand onto the executable ladder {0, 1, 2, 4,
+    ...}: bounded compile count (log G programs) without ever serving a
+    program too small for the flush. Demands above ``max_groups`` fall back
+    to the always-sufficient worst-case program."""
+    if needed <= 0:
+        return 0
+    g = 1
+    while g < needed:
+        g *= 2
+    if max_groups is not None and g > max_groups:
+        return G_full
+    return min(g, G_full)
+
+
+def make_plan(method: api.GPMethod, kfn, params, state: api.PICState,
+              spec: api.ServeSpec) -> PICServePlan:
+    """``GPMethod.plan_fn`` for ppic/pic."""
+    plan = PICServePlan(method, spec.resolve_kfn(kfn), params, state, spec,
+                        spec.resolve_block_q(kfn), spec.resolve_buckets(kfn))
+    if spec.cached_cinv:
+        plan = dataclasses.replace(plan,
+                                   caches=plan._rebuild_caches(state))
+    return plan
+
+
 def predict_distributed(kfn, params, S, X, y, U,
                         runner: Runner) -> ParallelPosterior:
     """Fully-collective pPIC (psum inside the per-machine program)."""
@@ -313,5 +536,7 @@ def predict_distributed(kfn, params, S, X, y, U,
     return ParallelPosterior(runner.unshard(means), covs)
 
 
-api.register(api.GPMethod("ppic", fit, predict_batch, predict_batch_diag,
-                          predict_routed_diag, init_store=init_store))
+api.register(api.GPMethod("ppic", fit, predict_fn=predict_batch,
+                          predict_diag_fn=predict_batch_diag,
+                          predict_routed_diag_fn=predict_routed_diag,
+                          init_store=init_store, plan_fn=make_plan))

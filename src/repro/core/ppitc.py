@@ -19,10 +19,11 @@ where prediction itself must stay on-device.
 Unlike pPIC, pPITC needs no routed serving variant: eqs. (7)-(8) touch only
 the global S-space factors, so a query's posterior is already independent of
 which machine evaluates it — ``predict_blocks`` is pure layout. The
-``GPMethod`` therefore registers with ``predict_routed_diag=None``; a
-``GPServer(routed=True)`` rejects it at construction and the plain
-``predict_diag`` path already carries the invariance routing buys (see
-ppic.predict_routed for the block-sensitive case).
+``GPMethod`` therefore registers with ``predict_routed_diag_fn=None``; a
+``GPServer(routed=True)`` rejects it at construction, ``ServePlan.
+routed_diag`` raises, and the plain diag path already carries the
+invariance routing buys (see ppic.predict_routed for the block-sensitive
+case).
 
 Zero prior mean assumed (data pipeline centers y).
 """
@@ -221,5 +222,6 @@ def init_store(kfn, params, X, y, *, S, runner: Runner):
     return online.init_pitc_store(kfn, params, X, y, S=S, runner=runner)
 
 
-api.register(api.GPMethod("ppitc", fit, predict_batch, predict_batch_diag,
+api.register(api.GPMethod("ppitc", fit, predict_fn=predict_batch,
+                          predict_diag_fn=predict_batch_diag,
                           init_store=init_store))

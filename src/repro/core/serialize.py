@@ -1,4 +1,4 @@
-"""Versioned posterior-state persistence (npz + schema tag).
+"""Versioned posterior-state AND incremental-store persistence (npz).
 
 Serving fleets replicate by shipping ``PosteriorState`` pytrees, not data:
 a state is a few small dense factors (|S|-space for the summary methods,
@@ -15,17 +15,33 @@ included (float64 fields need x64 enabled on load, as everywhere else).
 The registry is keyed by type NAME, so any module can add its own state via
 ``register_state`` and the loader stays closed over registered types —
 unknown or field-mismatched files fail loudly instead of mis-assembling.
+
+``save_store``/``load_store`` persist the incremental STORES themselves
+(``online.PITCStore``/``online.PICStore``/``picf.PICFStore``): the
+per-machine summary factors, pPIC block caches, and the pICF pivot basis —
+everything the Sec. 5.2 update algebra is closed over. A state checkpoint
+lets a restarted process SERVE; a store checkpoint lets it keep
+ASSIMILATING. Arrays round-trip bitwise under their own schema tag
+(``__store_schema__``); the two non-array store members are encoded as
+metadata — the kernel by registry name / ``KernelSpec`` fields, the runner
+by mode + machine count — and anything unencodable (a bespoke kernel
+closure, a ``ShardMapRunner`` whose mesh is process-local) must be
+re-supplied via the ``kfn=``/``runner=`` overrides at load time, failing
+loudly otherwise.
 """
 from __future__ import annotations
 
+import json
 import pathlib
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api
+from repro.core import covariance as cov
 
 SCHEMA_VERSION = 1
+STORE_SCHEMA_VERSION = 1
 
 _FIELD = "field:"
 
@@ -95,4 +111,197 @@ def peek(path) -> dict:
             "schema": int(z["__schema__"]),
             "fields": {k[len(_FIELD):]: (z[k].shape, str(z[k].dtype))
                        for k in z.files if k.startswith(_FIELD)},
+        }
+
+
+# ---------------------------------------------------------------------------
+# Store checkpointing: persist the Sec. 5.2 algebra, not just its output.
+# ---------------------------------------------------------------------------
+
+def _kernel_meta(kfn) -> dict:
+    """Encode a kernel by value where possible: a ``KernelSpec`` by its
+    (frozen, declarative) fields, a registry kernel by name. Anything else
+    is opaque — recorded for the error message, re-supplied at load."""
+    if isinstance(kfn, cov.KernelSpec):
+        return {"kind": "spec", "name": kfn.name, "impl": kfn.impl,
+                "fused": kfn.fused, "block_q": kfn.block_q}
+    for name, fn in cov.KERNELS.items():
+        if fn is kfn:
+            return {"kind": "named", "name": name}
+    return {"kind": "opaque", "repr": repr(kfn)}
+
+
+def _kernel_from_meta(meta: dict, override):
+    if override is not None:
+        return override
+    if meta["kind"] == "named":
+        return cov.make_kernel(meta["name"])
+    if meta["kind"] == "spec":
+        return cov.KernelSpec(meta["name"], meta["impl"], meta["fused"],
+                              meta["block_q"])
+    raise ValueError(
+        f"store checkpoint carries an opaque kernel ({meta.get('repr')}); "
+        f"pass load_store(..., kfn=<the fit-time kernel>) to restore")
+
+
+def _runner_meta(runner) -> dict:
+    from repro.parallel.runner import VmapRunner
+    if isinstance(runner, VmapRunner):
+        a = runner.axis_name
+        return {"kind": "vmap", "M": int(runner.M),
+                "axis_name": a if isinstance(a, str) else list(a)}
+    return {"kind": "opaque", "repr": repr(runner)}
+
+
+def _runner_from_meta(meta: dict, override):
+    from repro.parallel.runner import VmapRunner
+    if override is not None:
+        return override
+    if meta["kind"] == "vmap":
+        a = meta["axis_name"]
+        return VmapRunner(M=meta["M"],
+                          axis_name=a if isinstance(a, str) else tuple(a))
+    raise ValueError(
+        f"store checkpoint carries an opaque runner ({meta.get('repr')} — "
+        f"e.g. a ShardMapRunner, whose mesh is process-local); pass "
+        f"load_store(..., runner=<a runner for this process>) to restore")
+
+
+def _summary_arrays(s) -> dict:
+    return {"sum:ydot": s.locals_.ydot, "sum:Sdot": s.locals_.Sdot,
+            "sum:F": s.F, "sum:alive": s.alive, "sum:Kss": s.Kss,
+            "sum:Kss_L": s.Kss_L, "sum:Sdd_L": s.Sdd_L, "sum:ydd": s.ydd}
+
+
+def _summary_from(arr) -> "object":
+    from repro.core.online import SummaryStore
+    from repro.core.ppitc import LocalSummary
+    return SummaryStore(LocalSummary(arr["sum:ydot"], arr["sum:Sdot"]),
+                        arr["sum:F"], arr["sum:alive"], arr["sum:Kss"],
+                        arr["sum:Kss_L"], arr["sum:Sdd_L"], arr["sum:ydd"])
+
+
+def _pitc_store_arrays(store) -> dict:
+    return {"arr:S": store.S, **_summary_arrays(store.store)}
+
+
+def _pitc_store_from(kfn, params, runner, arr):
+    from repro.core.online import PITCStore
+    return PITCStore(kfn, params, arr["arr:S"], runner, _summary_from(arr))
+
+
+_PIC_BLOCK_FIELDS = ("Xb", "yb", "Ksd", "C_L", "Wy", "beta", "B")
+
+
+def _pic_store_arrays(store) -> dict:
+    out = {"arr:S": store.S, **_summary_arrays(store.store)}
+    out.update({f"blk:{f}": getattr(store.blocks, f)
+                for f in _PIC_BLOCK_FIELDS})
+    return out
+
+
+def _pic_store_from(kfn, params, runner, arr):
+    from repro.core.online import PICBlocks, PICStore
+    blocks = PICBlocks(*(arr[f"blk:{f}"] for f in _PIC_BLOCK_FIELDS))
+    return PICStore(kfn, params, arr["arr:S"], runner, _summary_from(arr),
+                    blocks)
+
+
+_PICF_FIELDS = ("Xb", "yb", "F", "Xp", "Lp", "alive", "Phi_L", "yF")
+
+
+def _picf_store_arrays(store) -> dict:
+    return {f"arr:{f}": getattr(store, f) for f in _PICF_FIELDS}
+
+
+def _picf_store_from(kfn, params, runner, arr):
+    from repro.core.picf import PICFStore
+    return PICFStore(kfn, params, runner,
+                     *(arr[f"arr:{f}"] for f in _PICF_FIELDS))
+
+
+_SUM_KEYS = ("sum:ydot", "sum:Sdot", "sum:F", "sum:alive", "sum:Kss",
+             "sum:Kss_L", "sum:Sdd_L", "sum:ydd")
+
+# name -> (flatten, rebuild(kfn, params, runner, arrays), expected keys)
+STORE_TYPES: dict[str, tuple] = {
+    "PITCStore": (_pitc_store_arrays, _pitc_store_from,
+                  frozenset(("arr:S",) + _SUM_KEYS)),
+    "PICStore": (_pic_store_arrays, _pic_store_from,
+                 frozenset(("arr:S",) + _SUM_KEYS
+                           + tuple(f"blk:{f}" for f in _PIC_BLOCK_FIELDS))),
+    "PICFStore": (_picf_store_arrays, _picf_store_from,
+                  frozenset(f"arr:{f}" for f in _PICF_FIELDS)),
+}
+
+_PARAM = "param:"
+
+
+def save_store(path, store) -> pathlib.Path:
+    """Write an incremental ``StateStore`` to ``path`` (npz). Arrays —
+    summaries, factors, block caches, pivot basis, hyperparameters —
+    round-trip bitwise; the kernel and runner are encoded as metadata (see
+    module docstring). Returns the path written."""
+    name = type(store).__name__
+    if name not in STORE_TYPES:
+        raise ValueError(
+            f"cannot serialize store type {name!r}; "
+            f"supported: {sorted(STORE_TYPES)}")
+    flatten, _, _ = STORE_TYPES[name]
+    payload = {k: np.asarray(v) for k, v in flatten(store).items()}
+    payload.update({_PARAM + k: np.asarray(v)
+                    for k, v in store.params.items()})
+    path = pathlib.Path(path)
+    with open(path, "wb") as fh:
+        np.savez(fh, __store_schema__=np.int64(STORE_SCHEMA_VERSION),
+                 __store__=np.str_(name),
+                 __kernel__=np.str_(json.dumps(_kernel_meta(store.kfn))),
+                 __runner__=np.str_(json.dumps(_runner_meta(store.runner))),
+                 **payload)
+    return path
+
+
+def load_store(path, *, kfn=None, runner=None):
+    """Reconstruct the store saved at ``path``; array members bitwise-
+    identical, so a restarted fleet resumes assimilating exactly where the
+    checkpoint left off. ``kfn``/``runner`` override the encoded members
+    (REQUIRED when the checkpoint recorded them as opaque)."""
+    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+        if "__store_schema__" not in z or "__store__" not in z:
+            raise ValueError(f"{path}: not a repro store checkpoint "
+                             f"(state checkpoints load via load_state)")
+        schema = int(z["__store_schema__"])
+        if schema != STORE_SCHEMA_VERSION:
+            raise ValueError(f"{path}: store schema v{schema} != supported "
+                             f"v{STORE_SCHEMA_VERSION}")
+        name = str(z["__store__"])
+        if name not in STORE_TYPES:
+            raise ValueError(f"{path}: unknown store type {name!r}; "
+                             f"supported: {sorted(STORE_TYPES)}")
+        _, rebuild, expect = STORE_TYPES[name]
+        arr = {k: jnp.asarray(z[k]) for k in z.files
+               if k.startswith(("arr:", "sum:", "blk:"))}
+        if set(arr) != set(expect):
+            raise ValueError(
+                f"{path}: field mismatch for {name}: file has "
+                f"{sorted(arr)}, expected {sorted(expect)} "
+                f"(store schema drifted — migrate the checkpoint)")
+        params = {k[len(_PARAM):]: jnp.asarray(z[k]) for k in z.files
+                  if k.startswith(_PARAM)}
+        kfn = _kernel_from_meta(json.loads(str(z["__kernel__"])), kfn)
+        runner = _runner_from_meta(json.loads(str(z["__runner__"])), runner)
+        return rebuild(kfn, params, runner, arr)
+
+
+def peek_store(path) -> dict:
+    """Cheap metadata read for a store checkpoint: type, schema, kernel and
+    runner encodings, and array shapes/dtypes."""
+    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+        return {
+            "store": str(z["__store__"]),
+            "schema": int(z["__store_schema__"]),
+            "kernel": json.loads(str(z["__kernel__"])),
+            "runner": json.loads(str(z["__runner__"])),
+            "fields": {k: (z[k].shape, str(z[k].dtype)) for k in z.files
+                       if k.startswith(("arr:", "sum:", "blk:", _PARAM))},
         }

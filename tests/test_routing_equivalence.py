@@ -274,8 +274,7 @@ class TestRegistryAndServer:
         srv = GPServer(model, max_batch=8, routed=True)
         perm = np.random.RandomState(seed).permutation(8)
         tickets = {int(i): srv.submit(prob["U"][int(i)]) for i in perm}
-        ref_m, ref_v = srv._predict_fn(model.params, model.state,
-                                       prob["U"][:8])
+        ref_m, ref_v = srv.plan.routed_diag(prob["U"][:8])
         for i in range(8):
             m, v = srv.result(tickets[i])
             np.testing.assert_array_equal(np.asarray(m), np.asarray(ref_m[i]))
