@@ -21,9 +21,11 @@ Serving is TWO-phase (the plan/execute split):
   treedef/shapes) — the serving fleet's assimilate/retire path.
 * phase 2 — ``plan.diag(U)`` / ``plan.routed_diag(U)`` / ``plan.full(U)``:
   the only predict entry points serving uses. ``FittedGP.predict*`` and
-  ``launch.gp_serve.GPServer`` are thin clients of a plan; the legacy
-  per-call ``GPMethod.predict*(kfn, params, state, U, tile=...)`` callables
-  survive as deprecated shims that build a default-spec plan.
+  ``launch.gp_serve.GPServer`` are thin clients of a plan (the legacy
+  per-call ``GPMethod.predict*`` shim surface is gone — one deprecation
+  cycle, as promised). ``ServeSpec.compat_key`` names the resolved policy
+  so the multi-tenant registry (``serving/``) can share one executable
+  lineage across plan-compatible deployments.
 
 Three structural layers below the plans:
 
@@ -53,7 +55,6 @@ serving fleets can checkpoint, restore, replicate, and keep assimilating.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
 
 import jax
@@ -323,6 +324,34 @@ class ServeSpec:
         return default_buckets(self.max_batch, min_bucket=self.min_bucket,
                                block_q=self.resolve_block_q(kfn))
 
+    def compat_key(self, kfn: Callable) -> tuple:
+        """Hashable identity of the COMPILED serving policy this spec
+        resolves to over fit-time kernel ``kfn``.
+
+        Two deployments whose compat keys match run byte-identical serving
+        programs: same resolved kernel callable, tile, bucket ladder, routed
+        dispatch, overflow ladder bound, backend caches, and dtype policy.
+        Everything that is a TRACED argument of the executables — params,
+        state, caches — is deliberately absent: executables are compiled
+        per argument SHAPE, so deployments differing only in posterior
+        values can share one executable lineage (the multi-tenant registry
+        combines this key with the method name and the state/params tree
+        structure to decide lineage sharing; ``serving/registry.py``).
+
+        Distinct specs can map to one key (e.g. ``block_q=None`` vs an
+        explicit ``block_q`` equal to the kernel's declared tile): the key
+        captures the RESOLVED policy, which is what the compiled programs
+        depend on.
+        """
+        served = self.resolve_kfn(kfn)
+        try:
+            hash(served)
+        except TypeError:       # bespoke closure: identity is the best key
+            served = id(served)
+        return (served, self.resolve_block_q(kfn), self.resolve_buckets(kfn),
+                self.routed, self.alpha, self.max_overflow_groups,
+                self.cached_cinv, self.dtype)
+
 
 # ---------------------------------------------------------------------------
 # ServePlan — phase 1's output: executables + caches, owned per state.
@@ -532,12 +561,6 @@ class ServePlan:
 # Method registry.
 # ---------------------------------------------------------------------------
 
-class PlanDeprecationWarning(DeprecationWarning):
-    """Raised by the legacy per-call ``GPMethod.predict*`` shims. First-party
-    code must serve through a ``ServePlan`` (CI runs the serving suites with
-    this warning escalated to an error)."""
-
-
 _DEFAULT_SPEC = ServeSpec()
 
 
@@ -566,12 +589,10 @@ class GPMethod:
       (``fgp``) leave it ``None``; for the summary/factor methods ``fit``
       IS ``init_store(...).to_state()``.
 
-    The bare-name attributes ``predict`` / ``predict_diag`` /
-    ``predict_routed_diag`` remain callable with the legacy per-call
-    signature ``(kfn, params, state, U, **kw)`` but are DEPRECATED shims:
-    they warn (``PlanDeprecationWarning``), build (and memoize) a
-    default-spec plan, and execute through it. Migrate to
-    ``method.plan(...)`` / ``FittedGP`` / ``GPServer``.
+    The legacy per-call ``method.predict*(kfn, params, state, U, **kw)``
+    shim surface is GONE (it lived one deprecation cycle behind
+    ``PlanDeprecationWarning``): every prediction goes through
+    ``method.plan(...)`` / ``FittedGP`` / a serving runtime.
     """
     name: str
     fit: Callable[..., Any]
@@ -598,74 +619,6 @@ class GPMethod:
         return ServePlan(self, served, params, state, spec,
                          spec.resolve_block_q(kfn),
                          spec.resolve_buckets(kfn))
-
-    # -- deprecated per-call shims (legacy surface) ---------------------------
-
-    def _shim_plan(self, kfn, params, state, spec: ServeSpec) -> ServePlan:
-        """Memoized default-spec plan for the legacy shims: repeated legacy
-        calls reuse one executable cache instead of re-jitting per call
-        (the plan is rebound per call — free, and jit's per-shape cache
-        absorbs state-shape drift). Cached entries are STRIPPED of
-        params/state/caches so the memo never pins a caller's posterior
-        beyond the call that supplied it."""
-        try:
-            key = (self.name, kfn, spec)
-            hash(key)
-        except TypeError:
-            key = (self.name, id(kfn), spec)
-        plan = _SHIM_PLANS.get(key)
-        if plan is None:
-            plan = self.plan(kfn, params, state, spec)
-            _SHIM_PLANS[key] = dataclasses.replace(plan, params=None,
-                                                   state=None, caches=None)
-            return plan
-        return dataclasses.replace(plan, params=params, state=state,
-                                   caches=plan._rebuild_caches(state))
-
-    def _deprecated(self, kind: str, impl_missing_ok: bool = False):
-        def shim(kfn, params, state, U, **kw):
-            warnings.warn(
-                f"GPMethod.{kind}(kfn, params, state, U, ...) is "
-                f"deprecated: build a serving plan once — "
-                f"method.plan(kfn, params, state, api.ServeSpec(...)) — "
-                f"and call plan.{_SHIM_TARGET[kind]}(U)",
-                PlanDeprecationWarning, stacklevel=2)
-            spec = _DEFAULT_SPEC
-            tile = kw.pop("tile", None)
-            if tile is not None:
-                spec = dataclasses.replace(spec, block_q=tile)
-            alpha = kw.pop("alpha", None)   # legacy routed headroom kwarg
-            if alpha is not None:
-                spec = dataclasses.replace(spec, alpha=alpha)
-            if kw:
-                raise TypeError(f"unexpected legacy kwargs {sorted(kw)}")
-            plan = self._shim_plan(kfn, params, state, spec)
-            return getattr(plan, _SHIM_TARGET[kind])(U)
-        shim.__name__ = f"{self.name}_{kind}_shim"
-        return shim
-
-    @property
-    def predict(self):
-        """DEPRECATED per-call surface; use ``plan(...).full``."""
-        return self._deprecated("predict")
-
-    @property
-    def predict_diag(self):
-        """DEPRECATED per-call surface; use ``plan(...).diag``."""
-        return self._deprecated("predict_diag")
-
-    @property
-    def predict_routed_diag(self):
-        """DEPRECATED per-call surface; use ``plan(...).routed_diag``.
-        ``None`` when the method has no routed path (registry contract)."""
-        if self.predict_routed_diag_fn is None:
-            return None
-        return self._deprecated("predict_routed_diag")
-
-
-_SHIM_TARGET = {"predict": "full", "predict_diag": "diag",
-                "predict_routed_diag": "routed_diag"}
-_SHIM_PLANS: dict = {}
 
 
 REGISTRY: dict[str, GPMethod] = {}

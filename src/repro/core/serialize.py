@@ -144,6 +144,38 @@ def _kernel_from_meta(meta: dict, override):
         f"pass load_store(..., kfn=<the fit-time kernel>) to restore")
 
 
+def _spec_meta(spec: api.ServeSpec) -> dict:
+    """Encode a ``ServeSpec`` as JSON metadata. Every field but the kernel
+    is a plain scalar/tuple; the kernel reuses the kernel encoding above
+    (an opaque kernel is recorded and fails loudly at DECODE time, so a
+    checkpoint is always writable and re-admission with an explicit
+    ``spec=`` override still works)."""
+    return {
+        "kernel": None if spec.kernel is None else _kernel_meta(spec.kernel),
+        "block_q": spec.block_q, "max_batch": spec.max_batch,
+        "buckets": None if spec.buckets is None else list(spec.buckets),
+        "min_bucket": spec.min_bucket, "routed": spec.routed,
+        "alpha": spec.alpha, "max_overflow_groups": spec.max_overflow_groups,
+        "cached_cinv": spec.cached_cinv, "dtype": spec.dtype,
+    }
+
+
+def _spec_from_meta(meta: dict) -> api.ServeSpec:
+    kernel = meta["kernel"]
+    if kernel is not None and kernel["kind"] == "opaque":
+        raise ValueError(
+            f"store checkpoint's ServeSpec carries an opaque kernel "
+            f"({kernel.get('repr')}); the serving policy cannot be "
+            f"reconstructed from the artifact alone — pass an explicit "
+            f"spec (e.g. TenantRegistry.admit_from_checkpoint(..., "
+            f"spec=...))")
+    kw = dict(meta, kernel=(None if kernel is None
+                            else _kernel_from_meta(kernel, None)))
+    buckets = kw["buckets"]
+    kw["buckets"] = None if buckets is None else tuple(buckets)
+    return api.ServeSpec(**kw)
+
+
 def _runner_meta(runner) -> dict:
     from repro.parallel.runner import VmapRunner
     if isinstance(runner, VmapRunner):
@@ -237,11 +269,17 @@ STORE_TYPES: dict[str, tuple] = {
 _PARAM = "param:"
 
 
-def save_store(path, store) -> pathlib.Path:
+def save_store(path, store, *, spec: api.ServeSpec | None = None
+               ) -> pathlib.Path:
     """Write an incremental ``StateStore`` to ``path`` (npz). Arrays —
     summaries, factors, block caches, pivot basis, hyperparameters —
     round-trip bitwise; the kernel and runner are encoded as metadata (see
-    module docstring). Returns the path written."""
+    module docstring). ``spec=`` additionally embeds the deployment's
+    ``ServeSpec`` next to the store, making the checkpoint a COMPLETE
+    serving artifact: a restarted fleet member re-admits the tenant —
+    posterior, streaming algebra, and serving policy — from this one file
+    (``serving.TenantRegistry.admit_from_checkpoint``). Returns the path
+    written."""
     name = type(store).__name__
     if name not in STORE_TYPES:
         raise ValueError(
@@ -251,6 +289,8 @@ def save_store(path, store) -> pathlib.Path:
     payload = {k: np.asarray(v) for k, v in flatten(store).items()}
     payload.update({_PARAM + k: np.asarray(v)
                     for k, v in store.params.items()})
+    if spec is not None:
+        payload["__serve_spec__"] = np.str_(json.dumps(_spec_meta(spec)))
     path = pathlib.Path(path)
     with open(path, "wb") as fh:
         np.savez(fh, __store_schema__=np.int64(STORE_SCHEMA_VERSION),
@@ -261,11 +301,15 @@ def save_store(path, store) -> pathlib.Path:
     return path
 
 
-def load_store(path, *, kfn=None, runner=None):
+def load_store(path, *, kfn=None, runner=None, with_spec: bool = False):
     """Reconstruct the store saved at ``path``; array members bitwise-
     identical, so a restarted fleet resumes assimilating exactly where the
     checkpoint left off. ``kfn``/``runner`` override the encoded members
-    (REQUIRED when the checkpoint recorded them as opaque)."""
+    (REQUIRED when the checkpoint recorded them as opaque).
+
+    ``with_spec=True`` returns ``(store, spec)`` where ``spec`` is the
+    embedded ``ServeSpec`` (``None`` when the checkpoint predates spec
+    embedding or was saved without ``spec=``)."""
     with np.load(pathlib.Path(path), allow_pickle=False) as z:
         if "__store_schema__" not in z or "__store__" not in z:
             raise ValueError(f"{path}: not a repro store checkpoint "
@@ -290,7 +334,12 @@ def load_store(path, *, kfn=None, runner=None):
                   if k.startswith(_PARAM)}
         kfn = _kernel_from_meta(json.loads(str(z["__kernel__"])), kfn)
         runner = _runner_from_meta(json.loads(str(z["__runner__"])), runner)
-        return rebuild(kfn, params, runner, arr)
+        store = rebuild(kfn, params, runner, arr)
+        if not with_spec:
+            return store
+        spec = (None if "__serve_spec__" not in z.files else
+                _spec_from_meta(json.loads(str(z["__serve_spec__"]))))
+        return store, spec
 
 
 def peek_store(path) -> dict:
@@ -302,6 +351,8 @@ def peek_store(path) -> dict:
             "schema": int(z["__store_schema__"]),
             "kernel": json.loads(str(z["__kernel__"])),
             "runner": json.loads(str(z["__runner__"])),
+            "serve_spec": (json.loads(str(z["__serve_spec__"]))
+                           if "__serve_spec__" in z.files else None),
             "fields": {k: (z[k].shape, str(z[k].dtype)) for k in z.files
                        if k.startswith(("arr:", "sum:", "blk:", _PARAM))},
         }

@@ -1,4 +1,4 @@
-"""Real-time microbatched GP prediction serving.
+"""Real-time microbatched GP prediction serving — single-tenant front-end.
 
 The paper's headline claim is that low-rank parallel GPs make *real-time*
 prediction possible. The serving-side realization (core/api.py two-phase
@@ -10,8 +10,8 @@ architecture):
   ladder, routed dispatch, backend caches, overflow-executable ladder —
   lives in an ``api.ServeSpec``, compiled once into an ``api.ServePlan``
   (``GPMethod.plan``). The server is a thin client: queueing, triggers,
-  tickets, and the streaming lifecycle are here; every prediction goes
-  through ``plan.diag`` / ``plan.routed_diag``;
+  tickets, and the streaming lifecycle are the runtime's; every prediction
+  goes through ``plan.diag`` / ``plan.routed_diag``;
 * incoming query points are queued and padded to the plan's bucket ladder,
   so ONE jitted dispatch serves the whole microbatch with at most
   ``len(buckets)`` compilations ever;
@@ -40,8 +40,17 @@ architecture):
   ``retire_machine``/``revive_machine`` fold machines out/in, and
   ``checkpoint``/``swap_from_checkpoint`` persist/restore the posterior —
   plus ``checkpoint_store``/``restore_store`` for the store itself
-  (``core.serialize``, versioned npz), so a restarted fleet keeps
-  assimilating, not just serving.
+  (``core.serialize``, versioned npz; the ``ServeSpec`` rides along so a
+  restarted fleet member can reconstruct the whole deployment from one
+  artifact), so a restarted fleet keeps assimilating, not just serving.
+
+Since the multi-tenant runtime landed (``repro.serving``), ``GPServer`` is
+a ONE-TENANT CLIENT of ``serving.TenantScheduler``: the queue, triggers,
+tickets, admission hooks, and stats all live in the scheduler/registry; the
+server contributes only the single-tenant ergonomics (no tenant_id on any
+call) and the store/checkpoint lifecycle. Multi-tenant equivalence rests on
+this — serving a tenant through the shared runtime IS serving it through a
+GPServer (tests/test_multitenant_serving.py asserts it bitwise).
 
 Single-process by design — the concurrency story is the mesh underneath
 (ShardMapRunner fit) plus XLA async dispatch; what this layer owns is
@@ -56,34 +65,19 @@ import time
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 from repro.core import api, serialize
+from repro.serving import ServeStats, TenantScheduler  # noqa: F401  (ServeStats
+# is re-exported: it was defined here before the serving package existed)
 
 # the ladder itself is spec-owned now (core/api.py); re-exported for the
 # callers that built server ladders directly
 default_buckets = api.default_buckets
 
 
-@dataclasses.dataclass
-class ServeStats:
-    n_requests: int = 0
-    n_batches: int = 0
-    n_padded_rows: int = 0
-    n_state_swaps: int = 0
-    n_updates: int = 0        # store-backed assimilate/retire/revive swaps
-    n_evicted: int = 0
-    # flush-trigger split: what actually drained the queue
-    n_size_flushes: int = 0
-    n_deadline_flushes: int = 0
-    n_manual_flushes: int = 0
-    # routed flushes served by the G=0 executable (no overflow dispatch)
-    n_g0_flushes: int = 0
-
-
 class GPServer:
-    """Microbatching front-end over a ``FittedGP`` — a thin client of the
-    model's ``ServePlan``.
+    """Microbatching front-end over a ``FittedGP`` — a thin single-tenant
+    client of the shared serving runtime (``repro.serving``).
 
     ``submit`` enqueues query points and returns a ticket; ``flush`` runs one
     jitted predict over the padded queue and resolves every ticket to a
@@ -101,9 +95,11 @@ class GPServer:
 
     Construction: pass ``spec=api.ServeSpec(...)`` for the full serving
     policy, or the legacy keywords (``max_batch``/``buckets``/``routed``/
-    ``block_q``), which assemble a spec. The plan is built once here and
-    rebound on every state swap.
+    ``block_q``), which assemble a spec. The plan is built once at admission
+    and rebound on every state swap.
     """
+
+    _TENANT = "default"
 
     def __init__(self, model: api.FittedGP, *, max_batch: int = 64,
                  buckets: tuple[int, ...] | None = None,
@@ -129,39 +125,62 @@ class GPServer:
                     "GPServer got both spec= and legacy serving kwargs "
                     "(routed/buckets/block_q/max_batch); declare the "
                     "policy inside api.ServeSpec(...)")
-            if spec.max_batch is None and spec.buckets is None:
-                # a server NEEDS a finite ladder (identity bucketing would
-                # compile one executable per distinct queue length — the
-                # tail-latency failure mode microbatching exists to avoid)
-                spec = dataclasses.replace(spec, max_batch=max_batch)
-        self.spec = spec
-        self.model = model
-        self.store = store
-        # queue threshold: the spec's declared max_batch, else its ladder top
-        self.max_batch = (spec.max_batch if spec.max_batch is not None
-                          else max(spec.buckets))
-        self.routed = spec.routed
-        method = model.method
-        if self.routed and method.predict_routed_diag_fn is None:
-            raise ValueError(
-                f"routed=True but method {method.name!r} has no "
-                f"predict_routed_diag (needs a state with block centroids, "
-                f"e.g. ppic/pic)")
-        # phase 1: compile the serving program — through the model's
-        # per-spec plan memo, so a server and direct model.predict* calls
-        # on the same spec share one executable lineage. params/state are
-        # traced arguments of every plan executable, so hot-swapping either
-        # re-runs the same compiled code at unchanged shapes/dtypes.
-        self.plan = model.plan(spec)
-        self.block_q = self.plan.block_q
-        self.buckets = self.plan.buckets
-        self.max_ready = max_ready
-        self.flush_deadline_ms = flush_deadline_ms
+        self._sched = TenantScheduler(clock=clock)
+        self._t = self._sched.admit(
+            self._TENANT, model, spec, store=store,
+            flush_deadline_ms=flush_deadline_ms, max_ready=max_ready,
+            max_batch=max_batch)
         self._clock = clock
-        self.stats = ServeStats()
-        self._queue: list[tuple[int, jax.Array, float]] = []
-        self._ready: dict[int, tuple[jax.Array, jax.Array]] = {}
-        self._next_ticket = 0
+
+    # -- tenant-record views (the record is the single source of truth) ------
+
+    @property
+    def spec(self) -> api.ServeSpec:
+        return self._t.spec
+
+    @property
+    def model(self) -> api.FittedGP:
+        return self._t.model
+
+    @property
+    def plan(self) -> api.ServePlan:
+        return self._t.plan
+
+    @property
+    def store(self) -> api.StateStore | None:
+        return self._t.store
+
+    @property
+    def stats(self) -> ServeStats:
+        return self._t.stats
+
+    @property
+    def routed(self) -> bool:
+        return self._t.spec.routed
+
+    @property
+    def max_batch(self) -> int:
+        return self._t.max_batch
+
+    @property
+    def max_ready(self) -> int:
+        return self._t.max_ready
+
+    @property
+    def block_q(self) -> int:
+        return self._t.plan.block_q
+
+    @property
+    def buckets(self):
+        return self._t.plan.buckets
+
+    @property
+    def flush_deadline_ms(self) -> float | None:
+        return self._t.flush_deadline_ms
+
+    @flush_deadline_ms.setter
+    def flush_deadline_ms(self, value: float | None) -> None:
+        self._t.flush_deadline_ms = value
 
     # -- request path -------------------------------------------------------
 
@@ -172,37 +191,21 @@ class GPServer:
         touch XLA, otherwise every distinct queue length eagerly compiles a
         fresh stack/pad kernel and the one-time compiles show up as serving
         tail latency."""
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._queue.append((ticket, np.asarray(x), self._clock()))
-        self.stats.n_requests += 1
-        if len(self._queue) >= self.max_batch:
-            self.flush(trigger="size")
-        elif self._deadline_exceeded():
-            self.flush(trigger="deadline")
-        return ticket
+        return self._sched.submit(self._TENANT, x)
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return self._t.pending
 
     def oldest_age_ms(self) -> float:
         """Age of the oldest pending ticket (0.0 when the queue is empty)."""
-        if not self._queue:
-            return 0.0
-        return (self._clock() - self._queue[0][2]) * 1e3
-
-    def _deadline_exceeded(self) -> bool:
-        return (self.flush_deadline_ms is not None and bool(self._queue)
-                and self.oldest_age_ms() >= self.flush_deadline_ms)
+        return self._sched.oldest_age_ms(self._TENANT)
 
     def pump(self) -> int:
         """Deadline driver: flush if the oldest pending ticket is past
         ``flush_deadline_ms``. Call from the serving loop whenever idle.
         Returns the number of tickets resolved (0 if nothing was due)."""
-        if self._deadline_exceeded():
-            return self.flush(trigger="deadline")
-        return 0
+        return self._sched.pump()
 
     def flush(self, *, trigger: str = "manual") -> int:
         """Serve the queue with one padded, jitted plan dispatch.
@@ -212,50 +215,14 @@ class GPServer:
         accepting submits immediately and each ticket materializes at
         ``result`` time. Returns the number of tickets resolved.
         """
-        if trigger not in ("size", "deadline", "manual"):
-            # validate before touching the queue: a bad trigger must not
-            # destroy pending tickets after predict but before resolution
-            raise ValueError(f"unknown flush trigger {trigger!r}; "
-                             f"expected 'size', 'deadline', or 'manual'")
-        if not self._queue:
-            return 0
-        queue = self._queue
-        U = np.stack([x for _, x, _ in queue])
-        # routed flushes need no pre-grouping here: the plan routes the
-        # staged batch host-side ONCE — the same assignment selects the
-        # overflow program (balanced flushes run the G=0 executable — lazy
-        # overflow dispatch) and drives the device-side scatter, which
-        # argsorts by block itself. A second nearest-centroid pass for
-        # queue locality would double the host routing cost on the
-        # latency-sensitive flush path for no device-side benefit, and
-        # per-ticket posteriors are arrival-order-invariant anyway
-        # (tests/test_routing_equivalence.py, bitwise).
-        tickets = [t for t, _, _ in queue]
-        # predict before clearing: a failing batch (e.g. one malformed
-        # point) must not destroy the other pending tickets
-        mean, var = self.predict(U)
-        if self.routed and self.plan.stats.last_g == 0:
-            self.stats.n_g0_flushes += 1
-        self._queue.clear()
-        field = {"size": "n_size_flushes", "deadline": "n_deadline_flushes",
-                 "manual": "n_manual_flushes"}[trigger]
-        setattr(self.stats, field, getattr(self.stats, field) + 1)
-        for i, t in enumerate(tickets):
-            self._ready[t] = (mean[i], var[i])
-        # bound memory against abandoned tickets: evict oldest results
-        # (dicts preserve insertion order) beyond max_ready
-        while len(self._ready) > self.max_ready:
-            dropped = next(iter(self._ready))
-            del self._ready[dropped]
-            self.stats.n_evicted += 1
-        return len(tickets)
+        return self._sched.flush(self._TENANT, trigger=trigger)
 
     def done(self, ticket: int) -> bool:
         """True when a ticket's result is ready to collect without flushing.
 
         'Ready' means the flush was dispatched — the device values may still
         be in flight; ``result``/``sync`` do the blocking."""
-        return ticket in self._ready
+        return self._sched.done(self._TENANT, ticket)
 
     def sync(self) -> None:
         """Block until every already-flushed result has materialized.
@@ -263,7 +230,7 @@ class GPServer:
         A measurement/shutdown barrier (benchmarks use it to charge real
         flush compute to the clock); normal serving lets ``result`` block
         per ticket instead."""
-        jax.block_until_ready(list(self._ready.values()))
+        self._sched.sync(self._TENANT)
 
     def result(self, ticket: int) -> tuple[jax.Array, jax.Array]:
         """(mean, var) for a ticket; flushes if it is still queued.
@@ -271,15 +238,7 @@ class GPServer:
         This is the only point the serving layer blocks on the device —
         everything upstream (flushes, slices) was dispatched asynchronously.
         """
-        if ticket not in self._ready:
-            self.flush()
-        try:
-            out = self._ready.pop(ticket)
-        except KeyError:
-            raise KeyError(f"ticket {ticket}: unknown, already collected, "
-                           f"or evicted (max_ready={self.max_ready})") \
-                from None
-        return jax.block_until_ready(out)
+        return self._sched.result(self._TENANT, ticket)
 
     # -- batch path ---------------------------------------------------------
 
@@ -288,14 +247,7 @@ class GPServer:
         plan dispatch (padding, staging, and — for routed plans — the
         occupancy-driven program selection are host-side inside the plan).
         """
-        before = self.plan.stats.n_padded_rows
-        if self.routed:
-            mean, var = self.plan.routed_diag(U)
-        else:
-            mean, var = self.plan.diag(U)
-        self.stats.n_batches += 1
-        self.stats.n_padded_rows += self.plan.stats.n_padded_rows - before
-        return mean, var
+        return self._sched.predict(self._TENANT, U)
 
     # -- state hot-swap -----------------------------------------------------
 
@@ -305,67 +257,53 @@ class GPServer:
         The plan is REBOUND, not rebuilt: same treedef + leaf shapes -> every
         jitted executable is reused; a changed structure (e.g. pPIC after
         assimilate grew the block axis) triggers exactly one recompile per
-        entry point on the next call.
+        entry point on the next call. A routed server validates the state
+        carries block centroids at swap time, not mid-flush under traffic.
         """
-        if self.routed and not hasattr(state, "centroids"):
-            # fail at swap time, not mid-flush under live traffic
-            raise ValueError(
-                f"routed server requires a state with block centroids; got "
-                f"{type(state).__name__} (a pPITC store emits PITCState — "
-                f"stream through a PIC-family store, or serve unrouted)")
-        # with_state rebinds every memoized plan (ours included), keeping
-        # the executable lineage — zero recompiles at unchanged shapes
-        self.model = self.model.with_state(state)
-        self.plan = self.model.plan(self.spec)
-        self.stats.n_state_swaps += 1
+        self._sched.swap_state(self._TENANT, state)
 
     # -- incremental-store lifecycle (api.StateStore protocol) --------------
 
     def _require_store(self, op: str) -> api.StateStore:
-        if self.store is None:
+        if self._t.store is None:
             raise ValueError(
                 f"GPServer.{op} needs an attached StateStore — construct "
                 f"with GPServer(model, store=api.init_store(...)) or call "
                 f"attach_store")
-        return self.store
+        return self._t.store
 
     def attach_store(self, store: api.StateStore) -> None:
         """Attach (or replace) the incremental store backing ``update``."""
-        self.store = store
-
-    def _commit(self, store: api.StateStore) -> None:
-        """Swap in a mutated store: pending tickets flush FIRST so every
-        ticket resolves against the posterior it was submitted under.
-        Atomic: ``swap_state`` (and its routed-centroid validation) runs
-        before ``self.store`` is reassigned, so a rejected state leaves the
-        server on the old store AND the old posterior — a retry won't fold
-        the same wave in twice."""
-        self.flush()
-        self.swap_state(store.to_state())
-        self.store = store
-        self.stats.n_updates += 1
+        self._t.store = store
 
     def update(self, X_new, y_new) -> None:
         """Assimilate a new data stream and hot-swap the posterior (Sec.
         5.2): O(|S|²·b) store update, zero recompilation when the state
         shapes are unchanged (pPITC) and exactly one recompile when the
-        block axis grows (pPIC/pICF)."""
-        self._commit(self._require_store("update").assimilate(X_new, y_new))
+        block axis grows (pPIC/pICF). Pending tickets flush first; the
+        swap is atomic (``TenantScheduler.commit_store``)."""
+        self._sched.commit_store(
+            self._TENANT, self._require_store("update").assimilate(X_new,
+                                                                   y_new))
 
     def retire_machine(self, machine: int) -> None:
         """Fold a failed/decommissioned machine's contribution out and keep
         serving the (exact) surviving posterior."""
-        self._commit(self._require_store("retire_machine").retire(machine))
+        self._sched.commit_store(
+            self._TENANT, self._require_store("retire_machine").retire(
+                machine))
 
     def revive_machine(self, machine: int) -> None:
-        self._commit(self._require_store("revive_machine").revive(machine))
+        self._sched.commit_store(
+            self._TENANT, self._require_store("revive_machine").revive(
+                machine))
 
     # -- checkpoint / restore ----------------------------------------------
 
     def checkpoint(self, path) -> None:
         """Persist the CURRENT serving state (core.serialize, versioned
         npz). What a replica ships to its peers — states, not data."""
-        serialize.save_state(path, self.model.state)
+        serialize.save_state(path, self._t.model.state)
 
     def swap_from_checkpoint(self, path) -> None:
         """Restore a checkpointed state and hot-swap it under live traffic
@@ -380,21 +318,27 @@ class GPServer:
         """
         self.flush()
         self.swap_state(serialize.load_state(path))
-        self.store = None
+        self._t.store = None
 
     def checkpoint_store(self, path) -> None:
         """Persist the attached ``StateStore`` itself (factors, block
-        caches, pivot basis — core.serialize.save_store): unlike a state
-        checkpoint, a restarted process that loads this keeps ASSIMILATING,
-        not just serving."""
-        serialize.save_store(path, self._require_store("checkpoint_store"))
+        caches, pivot basis — core.serialize.save_store) with this server's
+        ``ServeSpec`` embedded next to it: unlike a state checkpoint, a
+        restarted process that loads this keeps ASSIMILATING, not just
+        serving — and a restarted FLEET MEMBER can re-admit the whole
+        deployment (store + serving policy) from the one artifact
+        (``serving.TenantRegistry.admit_from_checkpoint``)."""
+        serialize.save_store(path, self._require_store("checkpoint_store"),
+                             spec=self._t.spec)
 
     def restore_store(self, path, *, kfn=None, runner=None) -> None:
         """Load a store checkpoint, attach it, and hot-swap its posterior
         (flushing pending tickets first) — the restarted-fleet resume path.
         ``kfn``/``runner`` override what the checkpoint could not encode
-        (see ``core.serialize.load_store``)."""
+        (see ``core.serialize.load_store``). The server keeps ITS OWN
+        serving spec — the embedded one (if any) exists for fleet
+        re-admission, where no live server holds a policy yet."""
         store = serialize.load_store(path, kfn=kfn, runner=runner)
         self.flush()
         self.swap_state(store.to_state())
-        self.store = store
+        self._t.store = store

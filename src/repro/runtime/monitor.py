@@ -7,12 +7,41 @@ machines whose heartbeat age exceeds the timeout and emits fail/recover
 events that the caller applies to the ClusterState (fault.fail /
 fault.recover_reassign). Also tracks step timing and EMA throughput the way
 a training-loop babysitter would.
+
+Every component takes an injectable ``clock`` (seconds, monotonic) — the
+same pattern as ``launch.gp_serve.GPServer`` — so heartbeat/sweep/stall
+tests drive a virtual clock instead of sleeping. ``Ema`` is the shared
+exponential-moving-average primitive: ``TrainMonitor`` uses it for step
+time and loss, and the serving observability layer (``serving/stats.py``)
+reuses it for per-tenant interarrival tracking (the adaptive flusher's
+input).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class Ema:
+    """Exponential moving average with explicit first-sample seeding.
+
+    ``update(x)`` seeds the average with the first observation (no
+    zero-bias warmup) and blends thereafter; ``value`` is ``None`` until a
+    sample arrives, so consumers can distinguish "no data yet" from a
+    genuinely small average (0.0 is a legal observation — truthiness tests
+    on the value would misclassify it)."""
+    alpha: float = 0.9
+    value: Optional[float] = None
+
+    def update(self, x: float) -> float:
+        self.value = (x if self.value is None
+                      else self.alpha * self.value + (1 - self.alpha) * x)
+        return self.value
+
+    def get(self, default: float = 0.0) -> float:
+        return default if self.value is None else self.value
 
 
 @dataclasses.dataclass
@@ -75,18 +104,17 @@ class TrainMonitor:
         self._last: Optional[float] = None
         self.metrics = StepMetrics()
 
+        self._step_ema = Ema(alpha=ema)
+        self._loss_ema = Ema(alpha=ema)
+
     def step(self, loss: float) -> StepMetrics:
         now = self.clock()
         m = self.metrics
         if self._last is not None:
-            dt = now - self._last
-            m.step_time_ema = (self.ema * m.step_time_ema
-                               + (1 - self.ema) * dt
-                               if m.step_time_ema else dt)
+            m.step_time_ema = self._step_ema.update(now - self._last)
             m.tokens_per_s = self.tokens / max(m.step_time_ema, 1e-9)
         self._last = now
-        m.loss_ema = (self.ema * m.loss_ema + (1 - self.ema) * loss
-                      if m.step != 0 else loss)
+        m.loss_ema = self._loss_ema.update(loss)
         m.step = m.step + 1
         return m
 

@@ -1,0 +1,26 @@
+"""Elastic multi-tenant serving runtime.
+
+Many independent posteriors multiplexed onto one process: a
+``TenantRegistry`` deduplicates compiled lineages across plan-compatible
+tenants, a ``TenantScheduler`` drains per-tenant microbatch queues
+earliest-weighted-deadline-first with admission control and an adaptive
+flusher, and ``serving.stats`` exports per-tenant/fleet observability.
+``launch.gp_serve.GPServer`` is the one-tenant client of this package.
+"""
+from repro.serving.registry import (AdaptiveDeadline, Tenant, TenantRegistry,
+                                    lineage_key)
+from repro.serving.scheduler import AdmissionError, TenantScheduler
+from repro.serving.stats import Ema, Reservoir, ServeStats, rollup
+
+__all__ = [
+    "AdaptiveDeadline",
+    "AdmissionError",
+    "Ema",
+    "Reservoir",
+    "ServeStats",
+    "Tenant",
+    "TenantRegistry",
+    "TenantScheduler",
+    "lineage_key",
+    "rollup",
+]

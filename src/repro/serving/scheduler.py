@@ -1,0 +1,294 @@
+"""Weighted-deadline dispatch over per-tenant microbatch queues.
+
+One process, many tenants, one dispatch loop. Each tenant keeps its own
+queue, tickets, and flush policy (its ``GPServer`` semantics, unchanged);
+what centralizes is WHEN queues drain: ``pump()`` replaces per-server
+polling with earliest-weighted-deadline-first over every admitted tenant.
+
+A tenant's oldest ticket is DUE at
+
+    due = t_submit(oldest) + effective_deadline_ms / 1e3 / weight
+
+so ``weight`` scales urgency (a weight-2 tenant's staleness budget is
+effectively halved) without touching the declared budget, and ``weight=1``
+with a fixed deadline reproduces ``GPServer`` exactly — the bitwise
+single-tenant-equivalence ground truth (tests/test_multitenant_serving.py)
+rests on that identity. ``pump()`` flushes EVERY due tenant, ordered by
+(due, admission seq): a due tenant is never passed over for a
+heavier-weighted one, which is the no-starvation property — skewed weights
+reorder service, they cannot deny it.
+
+The other two policies hang off the same loop:
+
+* admission control — ``max_pending`` caps a tenant's queue depth at
+  submit time; ``overflow="reject"`` raises ``AdmissionError`` (the caller
+  holds no ticket), ``overflow="shed_oldest"`` drops the oldest queued
+  ticket to admit the newest (the shed ticket will never resolve). Both
+  are counted (``n_rejected``/``n_shed``) — load shedding that doesn't
+  show up in stats is an outage that doesn't show up in monitoring.
+* adaptive flusher — with an ``AdaptiveDeadline`` policy the effective
+  deadline tracks ``gain x EMA(interarrival)`` clipped to
+  [floor_ms, declared budget]: brisk tenants flush at the cadence their
+  own traffic sets (low staleness), sparse tenants wait out the full
+  budget (maximum batching). See ``registry.AdaptiveDeadline``.
+
+Everything is driven by one injectable ``clock`` (seconds, monotonic) so
+scheduling tests and the latency bench run on virtual time.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.serving.registry import Tenant, TenantRegistry
+from repro.serving.stats import rollup
+
+
+class AdmissionError(RuntimeError):
+    """Submit refused: the tenant's queue is at ``max_pending`` under the
+    ``reject`` overflow policy. The request holds NO ticket."""
+
+
+class TenantScheduler:
+    """Central dispatch loop over a ``TenantRegistry``'s tenant queues.
+
+    The request path mirrors ``GPServer`` per tenant — ``submit`` returns a
+    ticket (per-tenant namespace, starting at 0), size/deadline/manual
+    triggers drain the queue through one padded plan dispatch, ``result``
+    blocks on exactly one ticket — plus the cross-tenant policies described
+    in the module docstring. ``GPServer`` itself is a one-tenant client of
+    this class.
+    """
+
+    def __init__(self, registry: TenantRegistry | None = None, *,
+                 clock: Callable[[], float] = time.monotonic,
+                 log_len: int = 512):
+        self.registry = registry if registry is not None else TenantRegistry()
+        self._clock = clock
+        # (tenant_id, trigger, n_tickets) per flush, newest last — the
+        # ordering the property tests (and a human debugging priority
+        # inversions) inspect
+        self.dispatch_log: deque = deque(maxlen=log_len)
+
+    # -- membership (registry passthrough + drain semantics) ----------------
+
+    def admit(self, tenant_id: str, model, spec=None, **kw) -> Tenant:
+        """``TenantRegistry.admit`` — see there for the knobs."""
+        return self.registry.admit(tenant_id, model, spec, **kw)
+
+    def admit_from_checkpoint(self, tenant_id: str, path, **kw) -> Tenant:
+        return self.registry.admit_from_checkpoint(tenant_id, path, **kw)
+
+    def evict(self, tenant_id: str, *, drain: bool = True) -> Tenant:
+        """Remove a tenant. ``drain=True`` (default) flushes its pending
+        tickets first so already-promised work resolves into the returned
+        record's ``ready`` map; ``drain=False`` abandons them."""
+        if drain:
+            self.flush(tenant_id)
+        return self.registry.evict(tenant_id)
+
+    # -- request path --------------------------------------------------------
+
+    def submit(self, tenant_id: str, x) -> int:
+        """Enqueue one query point (d,) for a tenant; returns its ticket.
+
+        Points are staged host-side (NumPy): microbatch assembly must not
+        touch XLA, otherwise every distinct queue length eagerly compiles
+        a fresh stack/pad kernel (serving tail latency). Admission control
+        runs BEFORE enqueue; size/deadline triggers after, exactly as in
+        ``GPServer.submit``."""
+        t = self.registry.get(tenant_id)
+        now = self._clock()
+        if t.max_pending is not None and len(t.queue) >= t.max_pending:
+            if t.overflow == "reject":
+                t.stats.n_rejected += 1
+                raise AdmissionError(
+                    f"tenant {tenant_id!r}: queue depth {len(t.queue)} at "
+                    f"max_pending={t.max_pending} (reject policy); pump or "
+                    f"flush before resubmitting")
+            t.queue.pop(0)
+            t.stats.n_shed += 1
+        t.stats.observe_arrival(now, t.last_arrival)
+        t.last_arrival = now
+        ticket = t.next_ticket
+        t.next_ticket += 1
+        t.queue.append((ticket, np.asarray(x), now))
+        if len(t.queue) >= t.max_batch:
+            self._flush(t, "size")
+        elif self._past_deadline(t, now):
+            self._flush(t, "deadline")
+        return ticket
+
+    def pending(self, tenant_id: str) -> int:
+        return self.registry.get(tenant_id).pending
+
+    def oldest_age_ms(self, tenant_id: str) -> float:
+        """Age of a tenant's oldest pending ticket (0.0 when empty)."""
+        t = self.registry.get(tenant_id)
+        if not t.queue:
+            return 0.0
+        return (self._clock() - t.queue[0][2]) * 1e3
+
+    # -- deadline machinery --------------------------------------------------
+
+    def effective_deadline_ms(self, tenant_id: str) -> Optional[float]:
+        """The deadline actually in force for a tenant right now: the
+        declared ``flush_deadline_ms``, tightened by the adaptive policy
+        when one is set and interarrival data exists."""
+        return self._eff_ms(self.registry.get(tenant_id))
+
+    def _eff_ms(self, t: Tenant) -> Optional[float]:
+        base = t.flush_deadline_ms
+        if base is None or t.adaptive is None:
+            return base
+        ia = t.stats.interarrival.value
+        if ia is None:
+            return base
+        return min(base, max(t.adaptive.floor_ms, t.adaptive.gain * ia * 1e3))
+
+    def _due_at(self, t: Tenant) -> Optional[float]:
+        """Absolute weighted due time of a tenant's oldest ticket (None
+        when it has no deadline or an empty queue)."""
+        eff = self._eff_ms(t)
+        if eff is None or not t.queue:
+            return None
+        return t.queue[0][2] + eff * 1e-3 / t.weight
+
+    def _past_deadline(self, t: Tenant, now: float) -> bool:
+        due = self._due_at(t)
+        return due is not None and now >= due
+
+    def pump(self) -> int:
+        """Deadline driver: flush every tenant whose weighted due time has
+        passed, earliest-weighted-deadline first (admission order breaks
+        ties deterministically). Call from the serving loop whenever idle.
+        Returns total tickets resolved (0 if nothing was due)."""
+        now = self._clock()
+        due = []
+        for t in self.registry.tenants():
+            d = self._due_at(t)
+            if d is not None and now >= d:
+                due.append((d, t.seq, t))
+        due.sort(key=lambda e: (e[0], e[1]))
+        return sum(self._flush(t, "deadline") for _, _, t in due)
+
+    def flush(self, tenant_id: str | None = None, *,
+              trigger: str = "manual") -> int:
+        """Drain one tenant's queue (or every tenant's, ``tenant_id=None``)
+        with one padded, jitted plan dispatch each. Returns tickets
+        resolved. Dispatch is asynchronous — nothing blocks until
+        ``result``/``sync``."""
+        if tenant_id is None:
+            return sum(self._flush(t, trigger)
+                       for t in self.registry.tenants())
+        return self._flush(self.registry.get(tenant_id), trigger)
+
+    def _flush(self, t: Tenant, trigger: str) -> int:
+        if trigger not in ("size", "deadline", "manual"):
+            # validate before touching the queue: a bad trigger must not
+            # destroy pending tickets after predict but before resolution
+            raise ValueError(f"unknown flush trigger {trigger!r}; "
+                             f"expected 'size', 'deadline', or 'manual'")
+        if not t.queue:
+            return 0
+        queue = t.queue
+        U = np.stack([x for _, x, _ in queue])
+        tickets = [tk for tk, _, _ in queue]
+        # predict before clearing: a failing batch (e.g. one malformed
+        # point) must not destroy the other pending tickets
+        mean, var = self._predict(t, U)
+        now = self._clock()
+        for _, _, t_sub in queue:
+            t.stats.staleness.record((now - t_sub) * 1e3)
+        t.stats.observe_flush(
+            trigger, t.plan.stats.last_g if t.spec.routed else None)
+        t.queue.clear()
+        self.dispatch_log.append((t.tenant_id, trigger, len(tickets)))
+        for i, tk in enumerate(tickets):
+            t.ready[tk] = (mean[i], var[i])
+        # bound memory against abandoned tickets: evict oldest results
+        # (dicts preserve insertion order) beyond max_ready
+        while len(t.ready) > t.max_ready:
+            dropped = next(iter(t.ready))
+            del t.ready[dropped]
+            t.stats.n_evicted += 1
+        return len(tickets)
+
+    def done(self, tenant_id: str, ticket: int) -> bool:
+        """True when a ticket's flush was dispatched (device values may
+        still be in flight; ``result``/``sync`` do the blocking)."""
+        return ticket in self.registry.get(tenant_id).ready
+
+    def sync(self, tenant_id: str | None = None) -> None:
+        """Block until every already-flushed result (of one tenant, or of
+        all) has materialized — a measurement/shutdown barrier."""
+        tenants = (self.registry.tenants() if tenant_id is None
+                   else [self.registry.get(tenant_id)])
+        jax.block_until_ready([list(t.ready.values()) for t in tenants])
+
+    def result(self, tenant_id: str, ticket: int):
+        """(mean, var) for a tenant's ticket; flushes its queue if the
+        ticket is still pending. The only point this layer blocks on the
+        device."""
+        t = self.registry.get(tenant_id)
+        if ticket not in t.ready:
+            self._flush(t, "manual")
+        try:
+            out = t.ready.pop(ticket)
+        except KeyError:
+            raise KeyError(
+                f"ticket {ticket}: unknown, already collected, shed, or "
+                f"evicted (max_ready={t.max_ready})") from None
+        return jax.block_until_ready(out)
+
+    # -- batch path ----------------------------------------------------------
+
+    def predict(self, tenant_id: str, U):
+        """Synchronous bucket-padded (mean, var) over a caller-held (u, d)
+        batch for one tenant — one plan dispatch, no queue involved."""
+        return self._predict(self.registry.get(tenant_id), U)
+
+    def _predict(self, t: Tenant, U):
+        before = t.plan.stats.n_padded_rows
+        if t.spec.routed:
+            mean, var = t.plan.routed_diag(U)
+        else:
+            mean, var = t.plan.diag(U)
+        t.stats.n_batches += 1
+        t.stats.n_padded_rows += t.plan.stats.n_padded_rows - before
+        return mean, var
+
+    # -- state lifecycle -----------------------------------------------------
+
+    def swap_state(self, tenant_id: str, state: Any) -> None:
+        """Hot-swap one tenant's posterior (``TenantRegistry.rebind``):
+        executables are reused at unchanged shapes, other tenants are
+        untouched. Does NOT flush — tickets already queued resolve against
+        the new state; use ``commit_store`` for flush-then-swap."""
+        self.registry.rebind(tenant_id, state)
+
+    def commit_store(self, tenant_id: str, store) -> None:
+        """Swap in a mutated store: pending tickets flush FIRST so every
+        ticket resolves against the posterior it was submitted under.
+        Atomic: rebind (and its routed-centroid validation) runs before the
+        store is reassigned, so a rejected state leaves the tenant on the
+        old store AND the old posterior."""
+        t = self.registry.get(tenant_id)
+        self._flush(t, "manual")
+        self.registry.rebind(tenant_id, store.to_state())
+        t.store = store
+        t.stats.n_updates += 1
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self, tenant_id: str):
+        return self.registry.stats(tenant_id)
+
+    def rollup(self) -> dict:
+        """Fleet view: per-tenant snapshots + aggregate totals
+        (``serving.stats.rollup`` over the registry)."""
+        return rollup(self.registry.stats_by_tenant())

@@ -13,9 +13,9 @@ Acceptance (ISSUE 5):
 * balanced routed flushes select the G=0 executable (PlanStats/ServeStats
   counters), skewed ones a g>0 program from the ladder — all bitwise-equal
   to the worst-case-G legacy program;
-* the legacy ``GPMethod.predict*`` callables are deprecated shims (warn,
-  route through a default-spec plan) and first-party surfaces never hit
-  them;
+* the legacy ``GPMethod.predict*`` per-call shims are GONE (removed in the
+  multi-tenant serving PR): ``method.plan(...)`` is the only serving entry
+  point and first-party surfaces are silent under ``-W error``;
 * spec-owned ladders: ``default_buckets`` edge cases (max_batch <
   min_bucket, non-tile-aligned max_batch, degenerate sizes) are pinned;
 * ``ServeSpec(cached_cinv=True)`` serves the same posterior through the
@@ -473,34 +473,40 @@ class TestCachedCinv:
                                                cached_cinv=True))
 
 
-class TestDeprecatedShims:
-    def test_legacy_callables_warn_and_match_plan(self, prob32, models):
+class TestShimRemoval:
+    """The deprecated per-call ``GPMethod.predict*`` surface was removed
+    (multi-tenant serving PR satellite): ``method.plan(...)`` is the only
+    serving entry point."""
+
+    def test_per_call_shims_are_gone(self):
+        meth = api.get("ppic")
+        for name in ("predict", "predict_diag", "predict_routed_diag"):
+            assert not hasattr(meth, name)
+        assert not hasattr(api, "PlanDeprecationWarning")
+        assert not hasattr(api, "_SHIM_PLANS")
+
+    def test_plan_serves_what_the_shims_did(self, prob32, models):
+        """One method.plan(...) call replaces the per-call shim — and is
+        bitwise-identical to the model's memoized plan (same lineage)."""
         p = prob32
         model = models["ppic"]
-        meth = model.method
-        plan = model.plan()
+        plan = model.method.plan(model.kfn, model.params, model.state,
+                                 api.ServeSpec())
         pm, pv = plan.diag(p["U"][:8])
-        with pytest.warns(api.PlanDeprecationWarning):
-            sm, sv = meth.predict_diag(model.kfn, model.params, model.state,
-                                       p["U"][:8])
-        np.testing.assert_array_equal(np.asarray(sm), np.asarray(pm))
-        np.testing.assert_array_equal(np.asarray(sv), np.asarray(pv))
-        with pytest.warns(api.PlanDeprecationWarning):
-            meth.predict(model.kfn, model.params, model.state, p["U"][:4])
-        with pytest.warns(api.PlanDeprecationWarning):
-            meth.predict_routed_diag(model.kfn, model.params, model.state,
-                                     p["U"][:4], tile=8)
+        mm, mv = model.plan().diag(p["U"][:8])
+        np.testing.assert_array_equal(np.asarray(pm), np.asarray(mm))
+        np.testing.assert_array_equal(np.asarray(pv), np.asarray(mv))
 
     def test_routedless_methods_expose_none(self):
-        assert api.get("ppitc").predict_routed_diag is None
-        assert api.get("ppic").predict_routed_diag is not None
+        assert api.get("ppitc").predict_routed_diag_fn is None
+        assert api.get("ppic").predict_routed_diag_fn is not None
 
-    def test_first_party_surfaces_never_hit_shims(self, prob32, models):
-        """FittedGP and GPServer are plan clients — the deprecated per-call
-        surface must be silent under -W error (the CI satellite)."""
+    def test_first_party_surfaces_silent_under_w_error(self, prob32, models):
+        """FittedGP and GPServer are plan clients — the serving surface
+        must be silent under -W error (the CI deprecation gate)."""
         p = prob32
         with warnings.catch_warnings():
-            warnings.simplefilter("error", api.PlanDeprecationWarning)
+            warnings.simplefilter("error", DeprecationWarning)
             models["ppitc"].predict_diag(p["U"][:4])
             models["ppic"].predict_routed_diag(p["U"][:4])
             models["ppitc"].predict(p["U"][:4])

@@ -247,9 +247,9 @@ class TestTwoBucketScatter:
 
 class TestRegistryAndServer:
     def test_registry_exposes_routed_for_pic_family(self, prob):
-        assert api.get("ppic").predict_routed_diag is not None
-        assert api.get("pic").predict_routed_diag is not None
-        assert api.get("ppitc").predict_routed_diag is None
+        assert api.get("ppic").predict_routed_diag_fn is not None
+        assert api.get("pic").predict_routed_diag_fn is not None
+        assert api.get("ppitc").predict_routed_diag_fn is None
 
     def test_fitted_gp_routed_guard(self, prob):
         runner = VmapRunner(M=prob["M"])
