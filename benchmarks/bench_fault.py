@@ -1,19 +1,28 @@
 """Beyond-paper: fault-tolerance / straggler benchmarks enabled by the
 summary algebra (Sec. 5.2 + DESIGN.md §5): accuracy vs straggler deadline,
-failure-recovery cost vs full recompute, online assimilation cost, and the
+failure-recovery cost vs full recompute, online assimilation cost, the
 incremental (rank-b cholupdate) ``to_state`` vs a cold refit — all through
-the ``api.StateStore`` protocol serving uses."""
+the ``api.StateStore`` protocol serving uses — plus the self-healing
+serving loop under deterministic fault injection (``serving.chaos``):
+injected block failure mid-stream, auto-retire + degraded routed serving,
+checkpoint revive, and the recovery metrics the CI chaos job tracks."""
 from __future__ import annotations
 
 import dataclasses
+import os
+import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import api, covariance as cov, support
+from repro.core import api, covariance as cov, serialize, support
 from repro.data import synthetic
 from repro.parallel.runner import VmapRunner
 from repro.runtime import straggler
+from repro.serving import (FaultInjector, FaultPlan, HealthPolicy,
+                           TenantScheduler)
 
 from benchmarks import common
 
@@ -65,3 +74,90 @@ def run(quick: bool = False):
         if b == 8:
             common.metric("assimilate_b8_speedup_vs_rebuild",
                           t_build / max(t_assim, 1e-9))
+
+    # --- self-healing serving under injected faults ------------------------
+    # one block dies mid-stream (serving/chaos.py, deterministic schedule);
+    # the health ladder (serving/health.py) retries, auto-retires it from
+    # routing, serves its stranded queries degraded from the global
+    # posterior, and revives it from the last save_store checkpoint — all
+    # with zero recompiles. The emitted metrics are the CI chaos job's
+    # recovery trajectory.
+    pic_store = api.init_store("ppic", kfn, params, ds.X, ds.y, S=S,
+                               runner=runner)
+    model = api.FittedGP(api.get("ppic"), kfn, params, pic_store.to_state())
+    flush_u = 16
+    spec = api.ServeSpec(max_batch=flush_u, routed=True)
+    ckpt = os.path.join(tempfile.mkdtemp(prefix="bench_fault_"), "store.npz")
+    serialize.save_store(ckpt, pic_store, spec=spec)
+    policy = HealthPolicy(max_retries=2, max_consecutive_failures=1,
+                          backoff_base_ms=0.1, checkpoint=ckpt,
+                          revive_after_ms=0.0)
+    # the victim answers flushes 0..1, dies for the next few dispatch
+    # attempts, and would answer again after — the transient-fault shape
+    # whose end state must be bitwise-indistinguishable from no fault.
+    # Target the block the faulted flush actually routes the most queries
+    # to, so the injected death is guaranteed to strand real traffic.
+    from repro.core import clustering
+    U = np.asarray(ds.X_test[:flush_u * 8])
+    centroids = np.asarray(model.state.centroids)
+    victim = int(np.bincount(
+        clustering.nearest_center_np(U[2 * flush_u:3 * flush_u], centroids),
+        minlength=centroids.shape[0]).argmax())
+    injector = FaultInjector(FaultPlan(fail_at={victim: (2, 6)}))
+    sched = TenantScheduler()
+    tenant = sched.admit("chaos", model, spec, store=pic_store,
+                         health=policy, chaos=injector)
+    tenant.plan.warmup(ds.X.shape[1])
+    traces0 = tenant.plan.stats.n_traces
+    oracle = model.plan(api.ServeSpec(max_batch=flush_u, routed=True))
+
+    flush_us, tickets = [], []
+    for f in range(8):
+        rows = U[f * flush_u:(f + 1) * flush_u]
+        tk0 = tenant.next_ticket
+        for x in rows:
+            sched.submit("chaos", x)
+        t0 = time.perf_counter()
+        sched.flush("chaos")
+        sched.sync("chaos")
+        flush_us.append((time.perf_counter() - t0) * 1e6)
+        tickets.append(list(range(tk0, tenant.next_ticket)))
+        sched.pump()        # revive opportunity once the window passes
+    outs = {tk: sched.collect("chaos", tk)
+            for f in tickets for tk in f}
+    n_deg = sum(1 for *_, dg in outs.values() if dg)
+    assert all(np.isfinite(m).all() and np.isfinite(v).all()
+               for m, v, _ in outs.values()), \
+        "self-healing serving returned non-finite posteriors"
+    # post-revive flushes must be bitwise what a never-faulted plan serves
+    last = tickets[-1]
+    ref_m, ref_v = oracle.routed_diag(U[(len(tickets) - 1) * flush_u:
+                                        len(tickets) * flush_u])
+    ref_m, ref_v = np.asarray(ref_m), np.asarray(ref_v)
+    post_bitwise = all(
+        np.array_equal(np.asarray(outs[tk][0]), ref_m[i])
+        and np.array_equal(np.asarray(outs[tk][1]), ref_v[i])
+        and not outs[tk][2]
+        for i, tk in enumerate(last))
+    serving_traces = tenant.plan.stats.n_traces - traces0
+    st = tenant.stats
+    healthy_us = float(np.median([flush_us[0], flush_us[-1]]))
+    faulted_us = float(max(flush_us))
+    common.emit("fault/chaos/flush_healthy", healthy_us,
+                f"flushes={len(flush_us)}")
+    common.emit("fault/chaos/flush_faulted", faulted_us,
+                f"retries={st.n_retries};auto_retired={st.n_auto_retired}")
+    common.emit("fault/chaos/recovery", faulted_us,
+                f"degraded_rows={st.n_degraded_rows};"
+                f"revives={st.n_revives};post_revive_bitwise={post_bitwise};"
+                f"serving_traces={serving_traces}")
+    common.metric("chaos_degraded_rows", st.n_degraded_rows)
+    common.metric("chaos_auto_retired", st.n_auto_retired)
+    common.metric("chaos_revives", st.n_revives)
+    common.metric("chaos_post_revive_bitwise", float(post_bitwise))
+    common.metric("chaos_serving_traces", serving_traces)
+    assert st.n_auto_retired >= 1 and st.n_revives >= 1, \
+        f"chaos scenario never exercised the ladder: {st.snapshot()}"
+    assert serving_traces == 0, \
+        f"self-healing serving recompiled {serving_traces}x mid-stream"
+    assert post_bitwise, "post-revive serving is not bitwise-identical"

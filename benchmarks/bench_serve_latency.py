@@ -362,11 +362,21 @@ def run(quick: bool = False, smoke: bool = False):
 
     # --- kernel-impl sweep: dense vs pallas xcov vs fused, both runners ----
     run_impl_sweep(kfn, params, state, ds.X_test, batches, "vmap")
-    mesh = jax.make_mesh((jax.device_count(),), ("data",))
-    sm_runner = ShardMapRunner(mesh=mesh, axis_name="data")
-    if n % sm_runner.num_machines == 0:
-        state_sm = ppitc.fit(kfn, params, ds.X, ds.y, S=S, runner=sm_runner)
-        run_impl_sweep(kfn, params, state_sm, ds.X_test, batches, "shardmap")
+    if jax.device_count() > 1:
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        sm_runner = ShardMapRunner(mesh=mesh, axis_name="data")
+        if n % sm_runner.num_machines == 0:
+            state_sm = ppitc.fit(kfn, params, ds.X, ds.y, S=S,
+                                 runner=sm_runner)
+            run_impl_sweep(kfn, params, state_sm, ds.X_test, batches,
+                           "shardmap")
+    else:
+        # a 1-device mesh would time the vmap path under a shard_map label —
+        # a row that LOOKS like cross-device evidence but isn't. Say so
+        # explicitly instead of silently emitting misleading numbers (the
+        # CPU-CI case).
+        common.emit("serve/xcov_sweep_shardmap", 0.0,
+                    "skipped: single-device mesh")
 
     # --- routed pPIC serving: composition-invariant, centroid-dispatched ---
     pic_state = ppic.fit(kfn, params, ds.X, ds.y, S=S, runner=runner)

@@ -369,6 +369,10 @@ class PlanStats:
     n_padded_rows: int = 0
     n_g0_batches: int = 0      # routed flushes served by the G=0 program
     last_g: int | None = None  # overflow-group count of the last routed call
+    # bounded degradation (PIC family): rows answered from the global
+    # S-space posterior because their routed block was marked dead
+    n_degraded_rows: int = 0
+    last_degraded: Any = None  # (u,) bool of the last routed call, or None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -497,14 +501,22 @@ class ServePlan:
         self.stats.n_diag_batches += 1
         return mean[:u], var[:u]
 
-    def routed_diag(self, U):
+    def routed_diag(self, U, block_alive=None):
         """Generic routed path: the method's raw routed impl, jitted with
         the spec's tile. Methods with a specialized plan (pPIC/PIC's
-        ``PICServePlan``) override this with backend caches and the
-        overflow-executable ladder; methods with no routed impl raise —
+        ``PICServePlan``) override this with backend caches, the
+        overflow-executable ladder, and bounded degradation
+        (``block_alive``); methods with no routed impl raise —
         their posterior is composition-invariant already, use ``diag``."""
         impl, kfn, tile = (self.method.predict_routed_diag_fn, self.kfn,
                            self.block_q)
+        if block_alive is not None:
+            raise ValueError(
+                f"method {self.method.name!r}'s generic routed plan has no "
+                f"bounded-degradation path (block_alive); only the PIC "
+                f"family's PICServePlan serves dead-block traffic from the "
+                f"global posterior")
+        self.stats.last_degraded = None
         if impl is None:
             raise ValueError(
                 f"method {self.method.name!r} has no routed serving "

@@ -420,7 +420,16 @@ class PICStore:
     def to_state(self) -> api.PICState:
         st = self.store
         glob = to_state(st, self.S)      # shared O(|S|²) global-factor path
-        if bool(st.alive.all()):
+        if isinstance(st.alive, jax.core.Tracer):
+            # under jit/vmap the mask is data we cannot branch on, and the
+            # dead-block gather below is a data-dependent shape anyway. A
+            # traced store can only have been built inside the trace
+            # (retire/revive/with_alive-incremental are host-side), so all
+            # blocks are alive by construction — take the no-gather path.
+            all_alive = True
+        else:
+            all_alive = bool(np.asarray(st.alive).all())
+        if all_alive:
             # streaming common case: no gather — every block cache (incl.
             # the full Xb dataset) is passed through by reference, keeping
             # update() at the advertised O(|S|² b)

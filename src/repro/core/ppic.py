@@ -307,6 +307,43 @@ def _routed_diag_program(kfn, params, state: api.PICState, Cinv, U,
             gather_two_bucket(vars_, vars_o, lay))
 
 
+def global_diag(kfn, params, state: api.PICState, U):
+    """The pPITC (eqs. 7-8) diag posterior from a PIC state's GLOBAL
+    factors only — no per-block cache touched.
+
+    ``PICState``'s first four fields ARE a ``PITCState`` (the S-space
+    summary the local corrections refine), so a query whose nearest block
+    is unavailable can still be answered from the global posterior: a
+    strictly coarser approximation (PIC minus its local correction), never
+    an error and never a NaN from the dead block's factors. This is the
+    bounded-degradation serving path — accuracy degrades to pPITC, bounded
+    by the ``with_alive`` refit oracle (tests/test_resilience.py)."""
+    from repro.core import ppitc
+    gstate = api.PITCState(state.S, state.Kss_L, state.Sdd_L, state.alpha)
+    return ppitc.predict_batch_diag(kfn, params, gstate, U)
+
+
+def _routed_deg_program(kfn, params, state: api.PICState, Cinv, U, assign,
+                        dead_row, *, alpha: int, tile: int,
+                        n_groups: int | None):
+    """``_routed_diag_program`` with per-row bounded degradation.
+
+    ``dead_row`` is a (|U|,) bool TRACED value (not a shape), so one
+    compiled program serves every failure pattern — which block died, and
+    how many rows it strands, never triggers a recompile (the acceptance
+    criterion the health layer's auto-retire leans on). Rows whose target
+    block is dead are answered from the global S-space posterior via a
+    per-row select; the select also firewalls NaN/Inf a poisoned block's
+    factors may have produced, since ``jnp.where`` never propagates the
+    unselected branch's values."""
+    mean_r, var_r = _routed_diag_program(kfn, params, state, Cinv, U, assign,
+                                         alpha=alpha, tile=tile,
+                                         n_groups=n_groups)
+    mean_g, var_g = global_diag(kfn, params, state, U)
+    return (jnp.where(dead_row, mean_g, mean_r),
+            jnp.where(dead_row, var_g, var_r))
+
+
 def predict_routed_diag(kfn, params, state: api.PICState, U, *,
                         alpha: int = ROUTED_ALPHA, tile: int | None = None):
     """Batch-composition-invariant (mean, var) for any |U|.
@@ -417,7 +454,20 @@ class PICServePlan(api.ServePlan):
                 _routed_diag_program(kfn, params, state, caches, U, assign,
                                      alpha=alpha, tile=tile, n_groups=g))
 
-    def routed_diag(self, U):
+    def _routed_deg_exec(self, g: int):
+        """The degraded-dispatch sibling of ``_routed_exec``: same program
+        plus a per-row global-posterior select keyed on a traced dead-row
+        mask (``_routed_deg_program``). A separate ladder key so healthy
+        flushes keep running the bitwise-unchanged baseline program."""
+        kfn, alpha, tile = self.kfn, self.spec.alpha, self.block_q
+        return self._jitted(
+            ("routed_deg", g),
+            lambda: lambda params, state, caches, U, assign, dead:
+                _routed_deg_program(kfn, params, state, caches, U, assign,
+                                    dead, alpha=alpha, tile=tile,
+                                    n_groups=g))
+
+    def routed_diag(self, U, block_alive=None):
         """Batch-composition-invariant (mean, var): pad to the bucket
         ladder, route host-side, pick the overflow program from the
         occupancy, dispatch.
@@ -438,11 +488,36 @@ class PICServePlan(api.ServePlan):
         alpha >= 1), pads sit positionally AFTER the real rows so they can
         never displace a real row's (block, slot) placement, and their
         outputs are trimmed — so overflow demand is the REAL rows' demand,
-        and balanced traffic runs G=0 regardless of padding."""
+        and balanced traffic runs G=0 regardless of padding.
+
+        ``block_alive`` (optional (M,) bool) is the health layer's routing
+        mask: rows whose nearest-centroid block is marked dead are answered
+        from the global S-space posterior instead (``global_diag``) through
+        the degraded executable ladder — same shapes, mask passed as a
+        traced value, zero recompiles once warmed. Which rows degraded is
+        surfaced via ``stats.last_degraded`` (None on fully-healthy
+        flushes, where the bitwise-unchanged baseline program runs)."""
         Up, u = self._padded(U)
         assign, g = self._route(np.asarray(Up), u)
-        mean, var = self._routed_exec(g)(self.params, self.state,
-                                         self.caches, Up, assign)
+        self.stats.last_degraded = None
+        dead = None
+        if block_alive is not None:
+            alive = np.asarray(block_alive, bool)
+            M = int(self.state.Xb.shape[0])
+            if alive.shape != (M,):
+                raise ValueError(
+                    f"block_alive must be an ({M},) bool mask over the "
+                    f"state's blocks; got shape {alive.shape}")
+            dead = ~alive[assign]
+        if dead is not None and dead.any():
+            mean, var = self._routed_deg_exec(g)(self.params, self.state,
+                                                 self.caches, Up, assign,
+                                                 dead)
+            self.stats.last_degraded = dead[:u].copy()
+            self.stats.n_degraded_rows += int(dead[:u].sum())
+        else:
+            mean, var = self._routed_exec(g)(self.params, self.state,
+                                             self.caches, Up, assign)
         self.stats.n_routed_batches += 1
         self.stats.last_g = g
         if g == 0:
@@ -474,11 +549,19 @@ class PICServePlan(api.ServePlan):
                              self.spec.max_overflow_groups)
         return assign, g
 
-    def warmup(self, d: int, *, dtype=np.float32) -> "PICServePlan":
+    def warmup(self, d: int, *, dtype=np.float32,
+               degraded: bool = True) -> "PICServePlan":
         """Pre-compile the FULL routed executable ladder per bucket — every
         (bucket, g) program a flush can select — so g-selection never pays
         a mid-serving compile (the p99 simulation in bench_serve_latency
-        charges real flush time to tickets and would see it)."""
+        charges real flush time to tickets and would see it).
+
+        ``degraded=True`` (default) additionally compiles the degraded
+        sibling of every (bucket, g) program: a block failing MID-STREAM
+        must not cost a compile on the first stranded flush (the dead-row
+        mask is a traced value, so one degraded program per (bucket, g)
+        covers every failure pattern). Pass ``degraded=False`` to halve
+        warmup time on deployments that run without the health layer."""
         if not self.spec.routed:
             return super().warmup(d, dtype=dtype)
         M = int(self.state.Xb.shape[0])
@@ -494,9 +577,14 @@ class PICServePlan(api.ServePlan):
                 gs = {g for g in gs
                       if g <= self.spec.max_overflow_groups} | {G}
             a0 = np.zeros((b,), np.int32)
+            d0 = np.zeros((b,), bool)
             for g in sorted(gs):
                 jax.block_until_ready(self._routed_exec(g)(
                     self.params, self.state, self.caches, U0, a0)[0])
+                if degraded:
+                    jax.block_until_ready(self._routed_deg_exec(g)(
+                        self.params, self.state, self.caches, U0, a0,
+                        d0)[0])
         return self
 
 

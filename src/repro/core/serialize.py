@@ -31,8 +31,11 @@ loudly otherwise.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import pathlib
+import zipfile
+import zlib
 
 import jax.numpy as jnp
 import numpy as np
@@ -44,6 +47,60 @@ SCHEMA_VERSION = 1
 STORE_SCHEMA_VERSION = 1
 
 _FIELD = "field:"
+
+
+class CheckpointError(ValueError):
+    """A checkpoint file cannot be trusted: missing, truncated, corrupt, or
+    failing its embedded per-field checksums. Carries the offending ``path``
+    and a human ``reason`` — the serving runtime's revive path keys on this
+    (a corrupt artifact must be DETECTED, never loaded into a tenant)."""
+
+    def __init__(self, path, reason: str):
+        self.path = str(path)
+        self.reason = reason
+        super().__init__(f"{self.path}: {reason}")
+
+
+@contextlib.contextmanager
+def _checkpoint_io(path, kind: str):
+    """Translate the raw failure modes of reading an npz — zipfile CRC/central-
+    directory errors on truncated or bit-flipped files, ``KeyError`` on
+    missing entries, NumPy header ``ValueError``s — into one CheckpointError
+    with the path attached. Our own CheckpointErrors pass through."""
+    try:
+        yield
+    except CheckpointError:
+        raise
+    except FileNotFoundError as e:
+        raise CheckpointError(path, f"no such {kind}") from e
+    except (zipfile.BadZipFile, EOFError, KeyError, OSError, ValueError) as e:
+        raise CheckpointError(
+            path, f"truncated or corrupt {kind} "
+                  f"({type(e).__name__}: {e})") from e
+
+
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+def _checksum_meta(payload: dict) -> np.str_:
+    return np.str_(json.dumps({k: _crc(v) for k, v in payload.items()}))
+
+
+def _verify_checksums(path, z, arrays: dict) -> None:
+    """Check materialized arrays against the embedded ``__checksums__`` map
+    (absent on pre-checksum checkpoints: nothing to verify). The zip layer
+    already CRCs each entry's bytes; this additionally pins the DECODED
+    array content, so a checkpoint that unzips cleanly but decodes to the
+    wrong bits (header tampering, partial rewrite) still fails loudly."""
+    if "__checksums__" not in z.files:
+        return
+    want = json.loads(str(z["__checksums__"]))
+    for k, a in arrays.items():
+        if k in want and _crc(a) != want[k]:
+            raise CheckpointError(
+                path, f"checksum mismatch for {k!r} (file is corrupt — "
+                      f"expected crc {want[k]}, got {_crc(a)})")
 
 STATE_TYPES: dict[str, type] = {}
 
@@ -74,38 +131,46 @@ def save_state(path, state) -> pathlib.Path:
                zip(state._fields, state)}
     with open(path, "wb") as fh:
         np.savez(fh, __schema__=np.int64(SCHEMA_VERSION),
-                 __state__=np.str_(name), **payload)
+                 __state__=np.str_(name),
+                 __checksums__=_checksum_meta(payload), **payload)
     return path
 
 
 def load_state(path):
-    """Reconstruct the state saved at ``path``; bitwise-identical leaves."""
-    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+    """Reconstruct the state saved at ``path``; bitwise-identical leaves.
+    Truncated/corrupt files (and checksum failures) raise
+    ``CheckpointError`` instead of leaking raw zipfile/KeyError tracebacks."""
+    with _checkpoint_io(path, "state checkpoint"), \
+            np.load(pathlib.Path(path), allow_pickle=False) as z:
         if "__schema__" not in z or "__state__" not in z:
-            raise ValueError(f"{path}: not a repro state checkpoint")
+            raise CheckpointError(path, "not a repro state checkpoint")
         schema = int(z["__schema__"])
         if schema != SCHEMA_VERSION:
-            raise ValueError(
-                f"{path}: schema v{schema} != supported v{SCHEMA_VERSION}")
+            raise CheckpointError(
+                path, f"schema v{schema} != supported v{SCHEMA_VERSION}")
         name = str(z["__state__"])
         if name not in STATE_TYPES:
-            raise ValueError(
-                f"{path}: unknown state type {name!r}; registered: "
-                f"{sorted(STATE_TYPES)}")
+            raise CheckpointError(
+                path, f"unknown state type {name!r}; registered: "
+                      f"{sorted(STATE_TYPES)}")
         cls = STATE_TYPES[name]
         saved = {k[len(_FIELD):] for k in z.files if k.startswith(_FIELD)}
         if saved != set(cls._fields):
-            raise ValueError(
-                f"{path}: field mismatch for {name}: file has "
-                f"{sorted(saved)}, {name} expects {sorted(cls._fields)} "
-                f"(state schema drifted — migrate the checkpoint)")
-        return cls(*(jnp.asarray(z[_FIELD + f]) for f in cls._fields))
+            raise CheckpointError(
+                path, f"field mismatch for {name}: file has "
+                      f"{sorted(saved)}, {name} expects "
+                      f"{sorted(cls._fields)} (state schema drifted — "
+                      f"migrate the checkpoint)")
+        arrays = {_FIELD + f: z[_FIELD + f] for f in cls._fields}
+        _verify_checksums(path, z, arrays)
+        return cls(*(jnp.asarray(arrays[_FIELD + f]) for f in cls._fields))
 
 
 def peek(path) -> dict:
     """Cheap metadata read: {'state': type name, 'schema': int, 'fields':
     {name: (shape, dtype)}} without materializing device arrays."""
-    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+    with _checkpoint_io(path, "state checkpoint"), \
+            np.load(pathlib.Path(path), allow_pickle=False) as z:
         return {
             "state": str(z["__state__"]),
             "schema": int(z["__schema__"]),
@@ -289,6 +354,8 @@ def save_store(path, store, *, spec: api.ServeSpec | None = None
     payload = {k: np.asarray(v) for k, v in flatten(store).items()}
     payload.update({_PARAM + k: np.asarray(v)
                     for k, v in store.params.items()})
+    payload["__checksums__"] = _checksum_meta(
+        {k: v for k, v in payload.items() if not k.startswith("__")})
     if spec is not None:
         payload["__serve_spec__"] = np.str_(json.dumps(_spec_meta(spec)))
     path = pathlib.Path(path)
@@ -309,28 +376,40 @@ def load_store(path, *, kfn=None, runner=None, with_spec: bool = False):
 
     ``with_spec=True`` returns ``(store, spec)`` where ``spec`` is the
     embedded ``ServeSpec`` (``None`` when the checkpoint predates spec
-    embedding or was saved without ``spec=``)."""
-    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+    embedding or was saved without ``spec=``).
+
+    Truncated/corrupt files — and files whose arrays fail the embedded
+    ``__checksums__`` — raise ``CheckpointError`` (path + reason), never a
+    raw ``zipfile``/``KeyError`` traceback: the serving revive path must be
+    able to tell 'artifact is bad' from 'loader is broken'."""
+    with _checkpoint_io(path, "store checkpoint"), \
+            np.load(pathlib.Path(path), allow_pickle=False) as z:
         if "__store_schema__" not in z or "__store__" not in z:
-            raise ValueError(f"{path}: not a repro store checkpoint "
-                             f"(state checkpoints load via load_state)")
+            raise CheckpointError(
+                path, "not a repro store checkpoint (state checkpoints "
+                      "load via load_state)")
         schema = int(z["__store_schema__"])
         if schema != STORE_SCHEMA_VERSION:
-            raise ValueError(f"{path}: store schema v{schema} != supported "
-                             f"v{STORE_SCHEMA_VERSION}")
+            raise CheckpointError(
+                path, f"store schema v{schema} != supported "
+                      f"v{STORE_SCHEMA_VERSION}")
         name = str(z["__store__"])
         if name not in STORE_TYPES:
-            raise ValueError(f"{path}: unknown store type {name!r}; "
-                             f"supported: {sorted(STORE_TYPES)}")
+            raise CheckpointError(
+                path, f"unknown store type {name!r}; "
+                      f"supported: {sorted(STORE_TYPES)}")
         _, rebuild, expect = STORE_TYPES[name]
-        arr = {k: jnp.asarray(z[k]) for k in z.files
-               if k.startswith(("arr:", "sum:", "blk:"))}
+        raw = {k: z[k] for k in z.files
+               if k.startswith(("arr:", "sum:", "blk:", _PARAM))}
+        _verify_checksums(path, z, raw)
+        arr = {k: jnp.asarray(v) for k, v in raw.items()
+               if not k.startswith(_PARAM)}
         if set(arr) != set(expect):
-            raise ValueError(
-                f"{path}: field mismatch for {name}: file has "
-                f"{sorted(arr)}, expected {sorted(expect)} "
-                f"(store schema drifted — migrate the checkpoint)")
-        params = {k[len(_PARAM):]: jnp.asarray(z[k]) for k in z.files
+            raise CheckpointError(
+                path, f"field mismatch for {name}: file has "
+                      f"{sorted(arr)}, expected {sorted(expect)} "
+                      f"(store schema drifted — migrate the checkpoint)")
+        params = {k[len(_PARAM):]: jnp.asarray(v) for k, v in raw.items()
                   if k.startswith(_PARAM)}
         kfn = _kernel_from_meta(json.loads(str(z["__kernel__"])), kfn)
         runner = _runner_from_meta(json.loads(str(z["__runner__"])), runner)
@@ -345,7 +424,8 @@ def load_store(path, *, kfn=None, runner=None, with_spec: bool = False):
 def peek_store(path) -> dict:
     """Cheap metadata read for a store checkpoint: type, schema, kernel and
     runner encodings, and array shapes/dtypes."""
-    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+    with _checkpoint_io(path, "store checkpoint"), \
+            np.load(pathlib.Path(path), allow_pickle=False) as z:
         return {
             "store": str(z["__store__"]),
             "schema": int(z["__store_schema__"]),

@@ -97,6 +97,15 @@ class GPServer:
     policy, or the legacy keywords (``max_batch``/``buckets``/``routed``/
     ``block_q``), which assemble a spec. The plan is built once at admission
     and rebound on every state swap.
+
+    ``health=`` (True or a ``serving.HealthPolicy``) opts a routed server
+    into self-healing dispatch — per-block latency/finiteness tracking,
+    retry with backoff, auto-retire of failing blocks from routing (their
+    queries served degraded from the global posterior, flagged via
+    ``collect``), and background checkpoint revive. ``chaos=`` (a
+    ``serving.FaultPlan``/``FaultInjector``) attaches deterministic fault
+    injection for tests and benches. ``sleep`` is the injectable retry
+    backoff (virtual-time chaos tests pass a fake).
     """
 
     _TENANT = "default"
@@ -109,7 +118,10 @@ class GPServer:
                  store: api.StateStore | None = None,
                  block_q: int | None = None,
                  spec: api.ServeSpec | None = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 health: Any = None,
+                 chaos: Any = None):
         if spec is None:
             spec = api.ServeSpec(block_q=block_q, max_batch=max_batch,
                                  buckets=buckets, routed=routed)
@@ -125,11 +137,11 @@ class GPServer:
                     "GPServer got both spec= and legacy serving kwargs "
                     "(routed/buckets/block_q/max_batch); declare the "
                     "policy inside api.ServeSpec(...)")
-        self._sched = TenantScheduler(clock=clock)
+        self._sched = TenantScheduler(clock=clock, sleep=sleep)
         self._t = self._sched.admit(
             self._TENANT, model, spec, store=store,
             flush_deadline_ms=flush_deadline_ms, max_ready=max_ready,
-            max_batch=max_batch)
+            max_batch=max_batch, health=health, chaos=chaos)
         self._clock = clock
 
     # -- tenant-record views (the record is the single source of truth) ------
@@ -239,6 +251,25 @@ class GPServer:
         everything upstream (flushes, slices) was dispatched asynchronously.
         """
         return self._sched.result(self._TENANT, ticket)
+
+    def collect(self, ticket: int):
+        """(mean, var, degraded) for a ticket — ``result`` plus the
+        per-query degradation flag (True when the query's routed block was
+        health-retired and the answer came from the global posterior;
+        always False without ``health=``)."""
+        return self._sched.collect(self._TENANT, ticket)
+
+    # -- health -------------------------------------------------------------
+
+    @property
+    def health(self):
+        """The server's ``serving.HealthTracker`` (None without
+        ``health=``) — routing mask, per-block ledgers, revive timer."""
+        return self._t.health
+
+    def health_snapshot(self) -> dict | None:
+        """Export view of per-block health (None without ``health=``)."""
+        return None if self._t.health is None else self._t.health.snapshot()
 
     # -- batch path ---------------------------------------------------------
 

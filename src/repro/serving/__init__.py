@@ -3,10 +3,15 @@
 Many independent posteriors multiplexed onto one process: a
 ``TenantRegistry`` deduplicates compiled lineages across plan-compatible
 tenants, a ``TenantScheduler`` drains per-tenant microbatch queues
-earliest-weighted-deadline-first with admission control and an adaptive
-flusher, and ``serving.stats`` exports per-tenant/fleet observability.
+earliest-weighted-deadline-first with admission control, an adaptive
+flusher, and self-healing dispatch (``serving.health``: per-block health
+tracking, retry/retire/revive, bounded-degradation routed serving;
+``serving.chaos``: the deterministic fault injection that exercises it),
+and ``serving.stats`` exports per-tenant/fleet observability.
 ``launch.gp_serve.GPServer`` is the one-tenant client of this package.
 """
+from repro.serving.chaos import BlockDied, FaultInjector, FaultPlan
+from repro.serving.health import BlockHealth, HealthPolicy, HealthTracker
 from repro.serving.registry import (AdaptiveDeadline, Tenant, TenantRegistry,
                                     lineage_key)
 from repro.serving.scheduler import AdmissionError, TenantScheduler
@@ -15,7 +20,13 @@ from repro.serving.stats import Ema, Reservoir, ServeStats, rollup
 __all__ = [
     "AdaptiveDeadline",
     "AdmissionError",
+    "BlockDied",
+    "BlockHealth",
     "Ema",
+    "FaultInjector",
+    "FaultPlan",
+    "HealthPolicy",
+    "HealthTracker",
     "Reservoir",
     "ServeStats",
     "Tenant",

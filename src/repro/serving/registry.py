@@ -88,6 +88,14 @@ class Tenant:
     ready: dict = dataclasses.field(default_factory=dict)
     next_ticket: int = 0
     last_arrival: Optional[float] = None
+    # self-healing (serving/health.py) + fault injection (serving/chaos.py);
+    # None = the zero-overhead fast path in the scheduler's dispatch
+    health: Optional[Any] = None        # HealthTracker
+    chaos: Optional[Any] = None         # FaultInjector
+    # ticket -> bool, maintained in lockstep with ``ready``: True when the
+    # ticket's row was answered from the global posterior (its routed block
+    # was health-retired). Collected via TenantScheduler.collect().
+    ready_degraded: dict = dataclasses.field(default_factory=dict)
 
     @property
     def pending(self) -> int:
@@ -135,7 +143,9 @@ class TenantRegistry:
               max_pending: int | None = None,
               overflow: str = "reject",
               max_ready: int = 65536,
-              max_batch: int = 64) -> Tenant:
+              max_batch: int = 64,
+              health: Any = None,
+              chaos: Any = None) -> Tenant:
         """Admit a tenant; returns its live ``Tenant`` record.
 
         ``weight`` scales deadline urgency (a weight-2 tenant's tickets
@@ -143,6 +153,14 @@ class TenantRegistry:
         admission-control knobs (``"reject"`` raises at submit,
         ``"shed_oldest"`` drops the oldest queued ticket — both counted);
         ``adaptive=True`` opts into the default ``AdaptiveDeadline``.
+
+        ``health`` opts into self-healing dispatch (``serving/health.py``):
+        ``True`` for the default ``HealthPolicy``, or a ``HealthPolicy``
+        instance. Requires a routed spec — degraded serving re-routes a
+        retired block's queries to the global posterior, which only exists
+        for routed states. ``chaos`` attaches deterministic fault injection
+        (a ``chaos.FaultPlan`` or prebuilt ``chaos.FaultInjector``) for
+        tests/benches; production tenants leave it None.
         """
         if tenant_id in self._tenants:
             raise ValueError(f"tenant {tenant_id!r} already admitted; "
@@ -170,6 +188,23 @@ class TenantRegistry:
             adaptive = AdaptiveDeadline()
         elif adaptive is False:
             adaptive = None
+        if health is not None and health is not False:
+            from repro.serving.health import HealthPolicy, HealthTracker
+            if not spec.routed:
+                raise ValueError(
+                    f"tenant {tenant_id!r}: health tracking requires "
+                    f"routed=True — degraded serving answers a retired "
+                    f"block's queries from the global posterior, which "
+                    f"needs per-query block routing")
+            policy = HealthPolicy() if health is True else health
+            health = HealthTracker(
+                int(np.shape(model.state.centroids)[0]), policy)
+        else:
+            health = None
+        if chaos is not None:
+            from repro.serving.chaos import FaultInjector, FaultPlan
+            if isinstance(chaos, FaultPlan):
+                chaos = FaultInjector(chaos)
         plan = self._plan_for(model, spec)
         t = Tenant(tenant_id=tenant_id, model=model, spec=spec, plan=plan,
                    store=store, weight=weight,
@@ -178,7 +213,7 @@ class TenantRegistry:
                    max_ready=max_ready,
                    max_batch=(spec.max_batch if spec.max_batch is not None
                               else max(spec.buckets)),
-                   seq=self._seq)
+                   seq=self._seq, health=health, chaos=chaos)
         self._seq += 1
         self._tenants[tenant_id] = t
         return t

@@ -31,9 +31,20 @@ The other two policies hang off the same loop:
   [floor_ms, declared budget]: brisk tenants flush at the cadence their
   own traffic sets (low staleness), sparse tenants wait out the full
   budget (maximum batching). See ``registry.AdaptiveDeadline``.
+* self-healing dispatch — tenants admitted with ``health=`` run every
+  flush through ``_dispatch``'s policy ladder (``serving/health.py``):
+  latency and output-finiteness evidence is attributed per block, failed
+  flushes retry with exponential backoff (re-routing around blocks retired
+  in between), a block crossing the failure threshold is auto-retired from
+  ROUTING ONLY (its stranded queries served degraded from the global
+  posterior — zero recompiles, every ticket still answered), and ``pump``
+  background-revives retired blocks from the last good ``save_store``
+  checkpoint. ``chaos=`` attaches deterministic fault injection
+  (``serving/chaos.py``) for exercising all of the above.
 
-Everything is driven by one injectable ``clock`` (seconds, monotonic) so
-scheduling tests and the latency bench run on virtual time.
+Everything is driven by one injectable ``clock`` (seconds, monotonic) and
+one injectable ``sleep`` (retry backoff) so scheduling and chaos tests run
+on virtual time.
 """
 from __future__ import annotations
 
@@ -44,8 +55,14 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.core import clustering
 from repro.serving.registry import Tenant, TenantRegistry
 from repro.serving.stats import rollup
+
+
+class _FlushFault(Exception):
+    """Internal: a health-dispatch attempt produced evidence bad enough to
+    retry (non-finite healthy rows). Never escapes ``_dispatch``."""
 
 
 class AdmissionError(RuntimeError):
@@ -66,9 +83,11 @@ class TenantScheduler:
 
     def __init__(self, registry: TenantRegistry | None = None, *,
                  clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
                  log_len: int = 512):
         self.registry = registry if registry is not None else TenantRegistry()
         self._clock = clock
+        self._sleep = sleep
         # (tenant_id, trigger, n_tickets) per flush, newest last — the
         # ordering the property tests (and a human debugging priority
         # inversions) inspect
@@ -170,11 +189,39 @@ class TenantScheduler:
         now = self._clock()
         due = []
         for t in self.registry.tenants():
+            if (t.health is not None and t.health.dead_blocks()
+                    and t.health.policy.checkpoint is not None
+                    and now >= t.health.revive_due):
+                self._try_revive(t, now)
             d = self._due_at(t)
             if d is not None and now >= d:
                 due.append((d, t.seq, t))
         due.sort(key=lambda e: (e[0], e[1]))
         return sum(self._flush(t, "deadline") for _, _, t in due)
+
+    def _try_revive(self, t: Tenant, now: float) -> bool:
+        """Background revive: reload the tenant's last known-good
+        ``save_store`` checkpoint and swap it in via ``commit_store`` —
+        pending tickets flush (degraded) against the old posterior FIRST,
+        then the restored store's state rebinds with zero recompiles and
+        the dead blocks return to routing. A corrupt/truncated artifact is
+        detected (``serialize.CheckpointError``) and NEVER loaded: the
+        tenant stays degraded-but-correct and the revive timer re-arms."""
+        from repro.core import serialize
+        try:
+            store = serialize.load_store(
+                t.health.policy.checkpoint,
+                kfn=t.store.kfn if t.store is not None else t.model.kfn,
+                runner=t.store.runner if t.store is not None else None)
+        except serialize.CheckpointError:
+            t.stats.n_revive_failures += 1
+            t.health.defer_revive(self._clock())
+            return False
+        self.commit_store(t.tenant_id, store)
+        revived = t.health.revive_all(self._clock())
+        t.stats.n_revives += 1
+        self.dispatch_log.append((t.tenant_id, "revive", len(revived)))
+        return True
 
     def flush(self, tenant_id: str | None = None, *,
               trigger: str = "manual") -> int:
@@ -200,21 +247,26 @@ class TenantScheduler:
         tickets = [tk for tk, _, _ in queue]
         # predict before clearing: a failing batch (e.g. one malformed
         # point) must not destroy the other pending tickets
-        mean, var = self._predict(t, U)
+        mean, var, deg = self._dispatch(t, U)
         now = self._clock()
         for _, _, t_sub in queue:
             t.stats.staleness.record((now - t_sub) * 1e3)
         t.stats.observe_flush(
             trigger, t.plan.stats.last_g if t.spec.routed else None)
+        if deg is not None and deg.any():
+            t.stats.n_degraded_flushes += 1
+            t.stats.n_degraded_rows += int(deg.sum())
         t.queue.clear()
         self.dispatch_log.append((t.tenant_id, trigger, len(tickets)))
         for i, tk in enumerate(tickets):
             t.ready[tk] = (mean[i], var[i])
+            t.ready_degraded[tk] = bool(deg[i]) if deg is not None else False
         # bound memory against abandoned tickets: evict oldest results
         # (dicts preserve insertion order) beyond max_ready
         while len(t.ready) > t.max_ready:
             dropped = next(iter(t.ready))
             del t.ready[dropped]
+            t.ready_degraded.pop(dropped, None)
             t.stats.n_evicted += 1
         return len(tickets)
 
@@ -243,7 +295,21 @@ class TenantScheduler:
             raise KeyError(
                 f"ticket {ticket}: unknown, already collected, shed, or "
                 f"evicted (max_ready={t.max_ready})") from None
+        t.ready_degraded.pop(ticket, None)
         return jax.block_until_ready(out)
+
+    def collect(self, tenant_id: str, ticket: int):
+        """(mean, var, degraded) for a tenant's ticket — ``result`` plus
+        the per-query degradation flag: True when the row's routed block
+        was health-retired and the answer came from the global S-space
+        posterior (bounded accuracy loss, see serving/health.py). Callers
+        that ignore the flag can keep using ``result``."""
+        t = self.registry.get(tenant_id)
+        if ticket not in t.ready:
+            self._flush(t, "manual")
+        degraded = t.ready_degraded.get(ticket, False)
+        mean, var = self.result(tenant_id, ticket)
+        return mean, var, degraded
 
     # -- batch path ----------------------------------------------------------
 
@@ -252,15 +318,117 @@ class TenantScheduler:
         batch for one tenant — one plan dispatch, no queue involved."""
         return self._predict(self.registry.get(tenant_id), U)
 
-    def _predict(self, t: Tenant, U):
+    def _predict(self, t: Tenant, U, block_alive=None):
         before = t.plan.stats.n_padded_rows
         if t.spec.routed:
-            mean, var = t.plan.routed_diag(U)
+            mean, var = t.plan.routed_diag(U, block_alive=block_alive)
+        elif block_alive is not None:
+            raise ValueError(f"tenant {t.tenant_id!r}: block_alive routing "
+                             f"masks apply to routed tenants only")
         else:
             mean, var = t.plan.diag(U)
         t.stats.n_batches += 1
         t.stats.n_padded_rows += t.plan.stats.n_padded_rows - before
         return mean, var
+
+    def _dispatch(self, t: Tenant, U):
+        """One flush's (mean, var, degraded) through the self-healing policy
+        ladder. Without ``health``/``chaos`` this IS ``_predict`` — the
+        zero-overhead fast path every pre-existing tenant takes.
+
+        With health, the loop walks the ladder per attempt: route host-side
+        (same nearest-centroid float path as the plan — blame attribution
+        must agree with the device scatter), dispatch with the current
+        routing mask, MATERIALIZE the outputs (health is a blocking
+        observer: finiteness cannot be judged on an in-flight device
+        value), attribute evidence, and either accept or retry after a
+        seeded backoff. Every retry past the policy budget force-retires
+        the blocks it blamed, so each extra attempt strictly shrinks the
+        set of blocks that can fail — the loop provably terminates with
+        every ticket answered (worst case: all blocks retired, the whole
+        flush served degraded from the global posterior). Exceptions never
+        escape a health-managed dispatch."""
+        h, c = t.health, t.chaos
+        if h is None and c is None:
+            mean, var = self._predict(t, U)
+            return mean, var, None
+        from repro.serving.chaos import BlockDied
+        max_retries = h.policy.max_retries if h is not None else 0
+        attempt = 0
+        while True:
+            alive = h.alive_mask() if h is not None else None
+            assign = None
+            if t.spec.routed:
+                assign = clustering.nearest_center_np(
+                    np.asarray(U), np.asarray(t.model.state.centroids))
+            participating = ([] if assign is None else
+                             sorted({int(m) for m in assign
+                                     if alive is None or alive[m]}))
+            t0 = self._clock()
+            try:
+                if c is not None:
+                    c.before_dispatch(assign, alive)
+                mean, var = self._predict(t, U, block_alive=alive)
+                # materialize: the latency sample must cover device compute,
+                # and finiteness is only observable on host values
+                mean = np.asarray(jax.block_until_ready(mean))
+                var = np.asarray(jax.block_until_ready(var))
+                if c is not None:
+                    mean, var = c.poison(assign, mean, var, alive)
+                latency_ms = (self._clock() - t0) * 1e3
+                deg = (np.asarray(t.plan.stats.last_degraded)
+                       if t.spec.routed and t.plan.stats.last_degraded
+                       is not None else None)
+                if h is None:
+                    return mean, var, deg
+                h.observe_latency(participating, latency_ms)
+                bad = ~(np.isfinite(mean) & np.isfinite(var))
+                if deg is not None:
+                    bad &= ~deg       # degraded rows came from the global
+                                      # posterior, not a routed block
+                if bad.any():
+                    blamed = (participating if assign is None else
+                              sorted({int(m) for m in assign[bad]
+                                      if alive is None or alive[m]}))
+                    if blamed:
+                        t.stats.n_nonfinite_flushes += 1
+                        raise _FlushFault(blamed)
+                    # non-finite with nothing left to blame (the global
+                    # posterior itself is bad): retrying cannot help —
+                    # return what we have rather than loop or raise
+                    t.stats.n_nonfinite_flushes += 1
+                    return mean, var, deg
+                p = h.policy
+                if (p.flush_timeout_ms is not None
+                        and latency_ms > p.flush_timeout_ms):
+                    # a timeout is a LATENCY fault on a valid posterior:
+                    # accept the result, count the evidence against the
+                    # participating block the latency EMAs most implicate
+                    t.stats.n_timeout_flushes += 1
+                    culprit = h.slowest_of(participating)
+                    if culprit is not None and h.record_failure(culprit):
+                        if h.mark_dead(culprit, self._clock()):
+                            t.stats.n_auto_retired += 1
+                else:
+                    h.record_success(participating)
+                return mean, var, deg
+            except (BlockDied, _FlushFault) as e:
+                blamed = ([e.block] if isinstance(e, BlockDied)
+                          else list(e.args[0]))
+                if h is None:
+                    raise    # chaos without health: faults hit the caller
+                             # raw (the un-healed control experiment)
+                now = self._clock()
+                for m in blamed:
+                    threshold = h.record_failure(
+                        m, nonfinite=isinstance(e, _FlushFault))
+                    if (threshold or attempt >= max_retries) \
+                            and h.mark_dead(m, now):
+                        t.stats.n_auto_retired += 1
+                if attempt < max_retries:
+                    self._sleep(h.backoff_ms(attempt) * 1e-3)
+                t.stats.n_retries += 1
+                attempt += 1
 
     # -- state lifecycle -----------------------------------------------------
 

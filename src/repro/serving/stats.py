@@ -90,6 +90,17 @@ class ServeStats:
     # queued tickets dropped to admit newer ones (shed_oldest policy)
     n_rejected: int = 0
     n_shed: int = 0
+    # self-healing ladder (serving/health.py): degraded serving, retries,
+    # auto-retires, and checkpoint revives. All ints, so they flow into
+    # snapshot() and the fleet rollup automatically.
+    n_degraded_rows: int = 0      # rows answered from the global posterior
+    n_degraded_flushes: int = 0   # flushes with >= 1 degraded row
+    n_retries: int = 0            # dispatch attempts retried (backoff slept)
+    n_auto_retired: int = 0       # blocks health-retired from routing
+    n_revives: int = 0            # successful checkpoint revives
+    n_revive_failures: int = 0    # revive attempts refused (bad checkpoint)
+    n_nonfinite_flushes: int = 0  # flushes with non-finite healthy rows
+    n_timeout_flushes: int = 0    # flushes over the latency budget
     # routed overflow-ladder usage: group count g -> flushes served by the
     # g-group executable (which compiled programs traffic actually exercises)
     g_hist: dict = dataclasses.field(default_factory=dict)
