@@ -5,7 +5,6 @@ machine work should scale ~ (|D|/M)^3 block-cholesky once |D| dominates the
 |S|-terms; FGP ~ |D|^3. Slopes are reported in the derived column."""
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -125,7 +125,6 @@ def run(quick: bool = False):
         sched.pump()        # revive opportunity once the window passes
     outs = {tk: sched.collect("chaos", tk)
             for f in tickets for tk in f}
-    n_deg = sum(1 for *_, dg in outs.values() if dg)
     assert all(np.isfinite(m).all() and np.isfinite(v).all()
                for m, v, _ in outs.values()), \
         "self-healing serving returned non-finite posteriors"

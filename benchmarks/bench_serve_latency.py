@@ -55,8 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, clustering, covariance as cov, ppic, ppitc, \
-    support
+from repro.analysis import contracts
+from repro.core import api, covariance as cov, ppic, ppitc, support
 from repro.data import synthetic
 from repro.launch.gp_serve import GPServer
 from repro.parallel.runner import (ShardMapRunner, VmapRunner,
@@ -463,6 +463,29 @@ def run(quick: bool = False, smoke: bool = False):
         assert t_cinv <= t_trsm, \
             (f"cached-C^-1 routed flush {t_cinv:.0f}us not faster than the "
              f"trsm path {t_trsm:.0f}us on CPU (g={g})")
+
+    # --- compiled-program contract audit: the zero-recompile claim, struct-
+    # urally — every executable the routed serving drive touches must
+    # fingerprint (jaxpr sha256) identical across >= 3 rebind generations,
+    # with zero new traces (repro.analysis.contracts; full two-tenant
+    # interleaving audit runs in the CI chaos job)
+    audit = contracts.audit_rebind_generations(
+        plan_c, lambda pl: (pl.diag(Ur), pl.routed_diag(Ur)),
+        n_generations=3)
+    audit_ok = (audit["rebind_identical"]
+                and audit["rebind_new_traces"] == 0)
+    common.emit(f"serve/contract_audit/u{u_r}", 0.0,
+                f"n_executables={audit['n_executables']};"
+                f"generations={audit['n_rebind_generations']};"
+                f"identical={audit_ok}")
+    common.metric("audit_n_executables", float(audit["n_executables"]))
+    common.metric("audit_rebind_generations",
+                  float(audit["n_rebind_generations"]))
+    common.metric("audit_identical", float(audit_ok))
+    assert audit_ok, \
+        (f"contract audit: rebind generations not fingerprint-identical "
+         f"(identical={audit['rebind_identical']}, "
+         f"new_traces={audit['rebind_new_traces']})")
 
     # --- deadline flusher vs size-only trigger: p50/p99 at low arrival rate
     # max_batch=64 + 2ms interarrival: the size trigger alone would hold the

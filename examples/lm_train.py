@@ -53,7 +53,6 @@ def main():
                       f"moe_aux={float(metrics.moe_loss):.3f}")
             if (i + 1) % args.ckpt_every == 0:
                 mgr.save(i + 1, state, sync=False)
-                loader_state = loader.save_state()
         mgr.wait()
         print(f"checkpoints kept: {mgr.steps()}; loader cursor: "
               f"{loader.save_state()}")

@@ -13,7 +13,6 @@ for company before the server predicts anyway.
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import api, covariance as cov, ppic, support
 from repro.data import synthetic

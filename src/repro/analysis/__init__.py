@@ -1,0 +1,34 @@
+"""Static analysis for the serving stack's compiled-program invariants.
+
+The runtime guarantees this repo leans on — zero recompiles across
+rebinds/tenants, tracer-safe state transitions, a single serving dtype,
+seeded determinism — are enforced dynamically by the test suites, but a
+tracer-safety bug (``TracerBoolConversionError`` in ``PICStore.to_state``)
+still reached main before PR 7 hot-fixed it.  This package is the static
+half of the enforcement:
+
+* :mod:`repro.analysis.engine` — a dependency-free AST lint engine
+  (per-rule visitors, ``# analysis: ignore[RULE]`` suppressions,
+  text/JSON reporters, a checked-in baseline file);
+* :mod:`repro.analysis.rules` — the repo-specific rules (JIT001..JIT003,
+  DTY001, DET001, FRZ001);
+* :mod:`repro.analysis.contracts` — the compiled-program contract
+  auditor: jaxpr fingerprints for every ServePlan executable, a
+  ``@no_retrace`` registry, and rebind/tenant interleaving audits that
+  prove the zero-recompile claim structurally;
+* ``python -m repro.analysis`` — the CLI that runs the lint pass (and,
+  with ``--contracts``, the auditor) over ``src/`` and exits nonzero on
+  new findings.
+
+``engine`` and ``rules`` are stdlib-only on purpose: the CI lint job can
+run them without installing jax.  ``contracts`` imports jax lazily.
+"""
+from repro.analysis.engine import (  # noqa: F401
+    Finding,
+    ModuleInfo,
+    load_baseline,
+    run_rules,
+    to_json,
+    to_text,
+    write_baseline,
+)

@@ -1,0 +1,346 @@
+"""Compiled-program contract auditor.
+
+The zero-recompile claim — rebinding a posterior or interleaving tenants
+never builds a new XLA program — is enforced dynamically by the
+``PlanStats.n_traces`` counter.  A counter can only say *how many* traces
+happened; it cannot say the programs are the *same program*.  This module
+proves the claim structurally:
+
+* :func:`fingerprint` — sha256 of the jaxpr a plan executable traces to
+  for a given call signature (``jax.make_jaxpr`` re-traces the Python
+  callable, so audits snapshot/restore the trace counter around
+  themselves);
+* :func:`audit_plan` — capture the live call arguments of every cached
+  ``ServePlan`` executable by wrapping ``plan._exec`` during a traffic
+  drive, then fingerprint each one;
+* :func:`audit_rebind_generations` — serve, rebind onto value-perturbed
+  same-shape states N times, and require the executable set, the trace
+  counter, and every fingerprint to be identical across generations;
+* :func:`audit_tenant_interleaving` — admit two tenants of one compiled
+  lineage, interleave their traffic, and require no growth of the shared
+  executable cache and fingerprint-identical programs;
+* :func:`no_retrace` — a decorator registry for module-level jitted
+  functions: after :func:`freeze`, a call with a never-seen abstract
+  signature is a contract violation (it implies a silent recompile);
+* :func:`run_audit` — the CLI/CI entry: builds a small synthetic routed
+  ppic deployment, runs every audit, optionally writes a JSON report.
+
+jax is imported lazily so ``repro.analysis``'s lint half stays importable
+without it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import pathlib
+from typing import Any, Callable, Mapping
+
+__all__ = [
+    "fingerprint", "audit_plan", "audit_rebind_generations",
+    "audit_tenant_interleaving", "no_retrace", "freeze", "violations",
+    "registry_report", "reset_registry", "run_audit",
+]
+
+
+# ---------------------------------------------------------------------------
+# jaxpr fingerprints
+# ---------------------------------------------------------------------------
+
+def fingerprint(fn: Callable, args: tuple) -> str:
+    """sha256 of the jaxpr ``fn`` traces to for ``args``.  Two calls that
+    fingerprint equal are the same compiled program for XLA's purposes
+    (same primitives, shapes, dtypes); posterior VALUES ride in as traced
+    arguments and cannot influence the hash."""
+    import jax
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return hashlib.sha256(str(jaxpr).encode()).hexdigest()
+
+
+def _capture_args(plan, drive: Callable[[Any], None]) -> dict:
+    """Run ``drive(plan)`` with every cached executable wrapped by an
+    argument recorder; returns ``{exec_key: first call args}``.  The wrap
+    is reverted before returning even if the drive raises."""
+    originals = dict(plan._exec)
+    captured: dict = {}
+
+    def wrap(key, fn):
+        def spy(*args):
+            captured.setdefault(key, args)
+            return fn(*args)
+        return spy
+
+    plan._exec.update({k: wrap(k, f) for k, f in originals.items()})
+    try:
+        drive(plan)
+    finally:
+        # unwrap the spies but keep executables the drive created lazily —
+        # deleting them would force a recompile on the next drive and
+        # corrupt the very trace counter the audit protects
+        created = {k: f for k, f in plan._exec.items() if k not in originals}
+        plan._exec.clear()
+        plan._exec.update(originals)
+        plan._exec.update(created)
+    return captured
+
+
+def audit_plan(plan, drive: Callable[[Any], None]) -> dict:
+    """Fingerprint every executable ``drive`` exercises on ``plan``.
+
+    Returns ``{"fingerprints": {key: sha256}, "n_executables": int}``.
+    ``make_jaxpr`` re-traces through the plan's counted wrappers, so the
+    plan's trace counter is snapshotted and restored — an audit must not
+    perturb the very counter the runtime tests assert on."""
+    drive(plan)   # materialize lazily-selected executables before spying
+    captured = _capture_args(plan, drive)
+    before = plan.stats.n_traces
+    try:
+        fps = {str(k): fingerprint(plan._exec[k], args)
+               for k, args in sorted(captured.items(), key=lambda kv: str(kv[0]))}
+    finally:
+        plan.stats.n_traces = before
+    return {"fingerprints": fps, "n_executables": len(plan._exec)}
+
+
+# ---------------------------------------------------------------------------
+# rebind-generation audit
+# ---------------------------------------------------------------------------
+
+def _perturbed(state, rel: float):
+    """Same-shape, same-dtype state with every float leaf nudged — a
+    stand-in for an assimilate-free online refresh (assimilation grows
+    the support set and legitimately re-specializes)."""
+    import jax
+    import jax.numpy as jnp
+
+    def nudge(a):
+        a = jnp.asarray(a)
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            return a * (1 + jnp.asarray(rel, a.dtype))
+        return a
+    return jax.tree.map(nudge, state)
+
+
+def audit_rebind_generations(plan, drive: Callable[[Any], None], *,
+                             n_generations: int = 3) -> dict:
+    """Serve, then rebind onto ``n_generations`` value-perturbed states and
+    re-audit: the executable set, the trace counter, and every jaxpr
+    fingerprint must be identical across generations — the structural form
+    of the zero-recompile-on-rebind claim."""
+    base = audit_plan(plan, drive)
+    keys0 = set(map(str, plan._exec))
+    generations = [base["fingerprints"]]
+    traces0 = plan.stats.n_traces
+    identical = True
+    for i in range(1, n_generations):
+        gen_plan = plan.rebind(_perturbed(plan.state, 1e-6 * i))
+        audit = audit_plan(gen_plan, drive)
+        generations.append(audit["fingerprints"])
+        if audit["fingerprints"] != base["fingerprints"]:
+            identical = False
+        if set(map(str, gen_plan._exec)) != keys0:
+            identical = False
+    new_traces = plan.stats.n_traces - traces0
+    return {
+        "n_executables": base["n_executables"],
+        "n_audited": len(base["fingerprints"]),
+        "n_rebind_generations": n_generations,
+        "rebind_identical": identical,
+        "rebind_new_traces": int(new_traces),
+        "fingerprints": base["fingerprints"],
+        "generations": generations,
+    }
+
+
+# ---------------------------------------------------------------------------
+# tenant-interleaving audit
+# ---------------------------------------------------------------------------
+
+def audit_tenant_interleaving(model, spec, queries, *,
+                              n_rounds: int = 3) -> dict:
+    """Admit two tenants of one compiled lineage (same method/spec/state
+    shapes, independent posterior values), interleave their traffic, and
+    require: one lineage, no executable-cache growth, no new traces, and
+    fingerprint-identical programs before vs after the interleaving."""
+    import numpy as np
+    from repro.serving.registry import TenantRegistry
+    from repro.serving.scheduler import TenantScheduler
+
+    reg = TenantRegistry()
+    sched = TenantScheduler(reg)
+    ta = sched.admit("tenant-a", model, spec)
+    sched.admit("tenant-b", model.with_state(_perturbed(model.state, 1e-5)),
+                spec)
+    n_lineages = reg.n_lineages
+    # the lineage anchor is state-stripped (it owns executables, never a
+    # posterior); audit through tenant A's plan, which shares the anchor's
+    # executable cache with tenant B's
+    shared_plan = ta.plan
+    d = int(np.shape(queries)[-1])
+    shared_plan.warmup(d)
+
+    def drive(plan):
+        plan.diag(np.asarray(queries))
+        if plan.spec.routed:
+            plan.routed_diag(np.asarray(queries))
+
+    before = audit_plan(shared_plan, drive)
+    keys0 = set(map(str, shared_plan._exec))
+    traces0 = shared_plan.stats.n_traces
+    for r in range(n_rounds):
+        for i, row in enumerate(np.asarray(queries)):
+            sched.submit("tenant-a" if (i + r) % 2 == 0 else "tenant-b", row)
+        sched.flush()
+    after = audit_plan(shared_plan, drive)
+    return {
+        "n_lineages": int(n_lineages),
+        "n_tenant_interleavings": n_rounds,
+        "interleaving_identical": (
+            n_lineages == 1
+            and before["fingerprints"] == after["fingerprints"]
+            and set(map(str, shared_plan._exec)) == keys0
+            and shared_plan.stats.n_traces == traces0),
+        "interleaving_new_traces": int(shared_plan.stats.n_traces - traces0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# @no_retrace registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _NoRetraceRecord:
+    name: str
+    signatures: set = dataclasses.field(default_factory=set)
+    frozen: set | None = None
+    n_calls: int = 0
+
+
+_REGISTRY: dict[str, _NoRetraceRecord] = {}
+
+
+def _abstract_signature(args: tuple, kwargs: Mapping) -> tuple:
+    """The jit cache key as far as shapes/dtypes are concerned: array
+    leaves contribute (shape, dtype), everything else its repr (a Python
+    scalar's repr changing per call is exactly the JIT003 retrace bug)."""
+    import jax
+    import numpy as np
+    leaves, treedef = jax.tree.flatten((args, dict(kwargs)))
+    sig = []
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            sig.append((tuple(leaf.shape), str(leaf.dtype)))
+        elif isinstance(leaf, (bool, int, float, complex)):
+            sig.append((type(leaf).__name__, repr(leaf)))
+        else:
+            sig.append(repr(np.asarray(leaf).dtype) if hasattr(leaf, "__len__")
+                       else repr(leaf))
+    return (str(treedef), tuple(sig))
+
+
+def no_retrace(name: str) -> Callable:
+    """Register a jitted callable under the no-retrace contract: after
+    :func:`freeze`, any call with a never-seen abstract signature is a
+    violation (a distinct signature means jax compiled a new program).
+    Purely observational — calls are never blocked."""
+    def deco(fn: Callable) -> Callable:
+        rec = _REGISTRY.setdefault(name, _NoRetraceRecord(name))
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rec.signatures.add(_abstract_signature(args, kwargs))
+            rec.n_calls += 1
+            return fn(*args, **kwargs)
+
+        wrapper.__wrapped__ = fn
+        return wrapper
+    return deco
+
+
+def freeze() -> None:
+    """Snapshot every registered function's signature set — the post-warmup
+    declaration that all compiles have happened."""
+    for rec in _REGISTRY.values():
+        rec.frozen = set(rec.signatures)
+
+
+def violations() -> dict[str, int]:
+    """``{name: n new signatures since freeze}`` for every frozen record
+    that saw a never-before-seen signature — i.e. a silent recompile."""
+    return {rec.name: len(rec.signatures - rec.frozen)
+            for rec in _REGISTRY.values()
+            if rec.frozen is not None and rec.signatures - rec.frozen}
+
+
+def registry_report() -> dict[str, dict]:
+    return {rec.name: {"n_calls": rec.n_calls,
+                       "n_signatures": len(rec.signatures),
+                       "frozen": rec.frozen is not None}
+            for rec in _REGISTRY.values()}
+
+
+def reset_registry() -> None:
+    """Test hook: drop all recorded signatures and freeze points (the
+    decorated functions stay registered)."""
+    for rec in _REGISTRY.values():
+        rec.signatures.clear()
+        rec.frozen = None
+        rec.n_calls = 0
+
+
+# ---------------------------------------------------------------------------
+# CLI/CI entry
+# ---------------------------------------------------------------------------
+
+def run_audit(report_path: str | None = None, *, n_rebinds: int = 3,
+              seed: int = 0) -> dict:
+    """Build a small synthetic routed ppic deployment and run the full
+    audit: rebind generations, tenant interleaving, no_retrace registry.
+    Returns the report dict (and writes it as JSON to ``report_path``)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import api
+    from repro.core import covariance as cov
+    from repro.parallel.runner import VmapRunner
+
+    n, s, d, M, u = 64, 12, 3, 4, 10
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    X = jax.random.normal(k0, (n, d), jnp.float32)
+    S = jax.random.normal(k1, (s, d), jnp.float32)
+    U = np.asarray(jax.random.normal(k2, (u, d), jnp.float32))
+    params = cov.init_params(d, signal=1.3, noise=0.3, lengthscale=1.5,
+                             dtype=jnp.float32)
+    y = jnp.sin(X[:, 0]) + 0.3 * jax.random.normal(k3, (n,), jnp.float32)
+    kfn = cov.make_kernel("se")
+
+    model = api.fit("ppic", kfn, params, X, y, S=S,
+                    runner=VmapRunner(M=M))
+    # cached_cinv exercises the @no_retrace contract on ppic.cinv_blocks:
+    # plan build and every rebind recompute the block-inverse cache, which
+    # must reuse one compiled signature
+    spec = api.ServeSpec(max_batch=16, routed=True, cached_cinv=True)
+    plan = model.plan(spec)
+    plan.warmup(d)
+    freeze()
+
+    def drive(p):
+        p.diag(U)          # padded unrouted path
+        p.routed_diag(U)   # padded routed path
+
+    report: dict = {"seed": seed}
+    report.update(audit_rebind_generations(plan, drive,
+                                           n_generations=n_rebinds))
+    report.update(audit_tenant_interleaving(model, spec, U))
+    report["no_retrace"] = registry_report()
+    report["no_retrace_violations"] = violations()
+    report["ok"] = bool(
+        report["rebind_identical"]
+        and report["rebind_new_traces"] == 0
+        and report["interleaving_identical"]
+        and not report["no_retrace_violations"])
+    if report_path is not None:
+        pathlib.Path(report_path).write_text(json.dumps(report, indent=2)
+                                             + "\n")
+    return report

@@ -1,0 +1,468 @@
+"""Repo-specific lint rules over the jit-safety / determinism invariants.
+
+Every rule here encodes a bug class this repo has actually hit or is one
+refactor away from hitting (see docs/invariants.md):
+
+* **JIT001** — Python truthiness on likely-traced values (the PR-7
+  ``PICStore.to_state`` ``TracerBoolConversionError`` class).  A function
+  that explicitly branches on ``isinstance(x, jax.core.Tracer)`` has
+  already confronted the tracer case and is exempt — that is exactly the
+  shape of the PR-7 fix.
+* **JIT002** — host-sync calls (``.item()``, ``bool()``, ``np.asarray``)
+  inside functions that are jitted in this module.
+* **JIT003** — Python scalar literals passed to a jitted callable with no
+  static markings: each distinct Python type re-specializes the
+  executable, which silently violates the zero-recompile budget.
+* **DTY001** — float64 ``astype``/``dtype=`` leaking into the f32 serving
+  path against the ``ServeSpec`` dtype policy.
+* **DET001** — unseeded RNG / wall-clock calls in modules that promise
+  deterministic replay (chaos, health, stats, scheduler).
+* **FRZ001** — mutation of frozen plan/spec dataclasses (use
+  ``dataclasses.replace`` instead).
+
+Rules are path-scoped with substring prefixes so test fixtures can opt in
+by using a matching fake path.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.engine import Finding, ModuleInfo, Rule
+
+__all__ = ["ALL_RULES", "default_rules", "JIT001", "JIT002", "JIT003",
+           "DTY001", "DET001", "FRZ001"]
+
+
+# -- shared AST helpers -----------------------------------------------------
+
+def _dotted(node: ast.AST) -> str:
+    """``a.b.c`` for Attribute/Name chains, '' for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _functions(tree: ast.Module) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _handles_tracers(fn: ast.AST) -> bool:
+    """True when the function already branches on the tracer-ness of a
+    value — `isinstance(x, jax.core.Tracer)` (possibly inside a type
+    tuple), or a call to the sanctioned `api.concrete_alive_mask` guard.
+    That is the shape of every deliberate host/trace split in this repo,
+    so the whole function is exempt from JIT001."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted(node.func).endswith("concrete_alive_mask"):
+            return True
+        if (isinstance(node.func, ast.Name)
+                and node.func.id == "isinstance" and len(node.args) == 2):
+            types = node.args[1]
+            cands = types.elts if isinstance(types, ast.Tuple) else [types]
+            for c in cands:
+                if _dotted(c).endswith("Tracer"):
+                    return True
+    return False
+
+
+def _in_scope(path: str, prefixes: tuple[str, ...]) -> bool:
+    return any(p in path for p in prefixes)
+
+
+# -- JIT001 -----------------------------------------------------------------
+
+class JIT001(Rule):
+    """Python truthiness/branching on likely-traced mask values.
+
+    Flags ``if``/``while``/``assert``/``bool()``/``not``/ternary tests
+    whose expression touches a store mask (``.alive`` / ``.block_alive`` /
+    ``.mask``) or reduces one with ``.all()``/``.any()`` — evaluating such
+    a test under ``jax.jit`` raises ``TracerBoolConversionError`` at the
+    first traced call (the PR-7 ``PICStore.to_state`` bug).  Functions
+    that already split on ``isinstance(..., Tracer)`` are exempt.
+    """
+    name = "JIT001"
+    SCOPE = ("repro/core/", "repro/kernels/", "repro/parallel/")
+    MASK_ATTRS = frozenset({"alive", "block_alive", "mask", "dead"})
+    MASK_NAMES = frozenset({"alive", "dead", "mask"})
+
+    def _suspicious(self, expr: ast.AST) -> bool:
+        for node in ast.walk(expr):
+            # store.alive, self.alive, st.block_alive — attribute access on
+            # anything; plain Name masks are deliberately not matched so
+            # host-side `mask[machine]` after a tracer guard stays clean.
+            if isinstance(node, ast.Attribute) and node.attr in self.MASK_ATTRS:
+                return True
+            if isinstance(node, ast.Call):
+                f = node.func
+                # x.all() / x.any() where x is (or contains) a mask
+                if isinstance(f, ast.Attribute) and f.attr in ("all", "any"):
+                    for sub in ast.walk(f.value):
+                        if (isinstance(sub, ast.Attribute)
+                                and sub.attr in self.MASK_ATTRS):
+                            return True
+                        if (isinstance(sub, ast.Name)
+                                and sub.id in self.MASK_NAMES):
+                            return True
+                # np.all(mask) / jnp.any(store.alive)
+                if _dotted(f) in ("np.all", "np.any", "jnp.all", "jnp.any",
+                                  "numpy.all", "numpy.any",
+                                  "jax.numpy.all", "jax.numpy.any"):
+                    for arg in node.args:
+                        for sub in ast.walk(arg):
+                            if ((isinstance(sub, ast.Attribute)
+                                 and sub.attr in self.MASK_ATTRS)
+                                    or (isinstance(sub, ast.Name)
+                                        and sub.id in self.MASK_NAMES)):
+                                return True
+        return False
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not _in_scope(module.path, self.SCOPE):
+            return
+        flagged: set[int] = set()   # one finding per source line
+        for fn in _functions(module.tree):
+            if _handles_tracers(fn):
+                continue
+            for node in ast.walk(fn):
+                tests: list[ast.AST] = []
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    tests.append(node.test)
+                elif isinstance(node, ast.Assert):
+                    tests.append(node.test)
+                elif isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+                    tests.append(node.operand)
+                elif (isinstance(node, ast.Call)
+                      and isinstance(node.func, ast.Name)
+                      and node.func.id == "bool" and node.args):
+                    tests.append(node.args[0])
+                for t in tests:
+                    ln = getattr(node, "lineno", 0)
+                    if ln not in flagged and self._suspicious(t):
+                        flagged.add(ln)
+                        yield module.finding(
+                            self.name, node,
+                            "Python truthiness on a possibly-traced mask "
+                            "(TracerBoolConversionError under jit — the "
+                            "PR-7 to_state bug class); guard with "
+                            "isinstance(x, jax.core.Tracer) or stay in "
+                            "jnp.where")
+                        break   # one finding per statement
+
+
+# -- JIT002 -----------------------------------------------------------------
+
+def _jitted_functions(tree: ast.Module) -> Iterator[ast.AST]:
+    """Function bodies that execute under jit in this module: defs with a
+    jit decorator, defs later wrapped as ``g = jax.jit(f)``, and lambdas
+    passed to ``jax.jit`` inline."""
+    defs = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+            for dec in node.decorator_list:
+                d = dec.func if isinstance(dec, ast.Call) else dec
+                name = _dotted(d)
+                if name in ("jit", "jax.jit"):
+                    yield node
+                elif name in ("partial", "functools.partial") and \
+                        isinstance(dec, ast.Call) and dec.args and \
+                        _dotted(dec.args[0]) in ("jit", "jax.jit"):
+                    yield node
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _dotted(node.func) in ("jit", "jax.jit"):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Lambda):
+                    yield arg
+                elif isinstance(arg, ast.Name) and arg.id in defs:
+                    yield defs[arg.id]
+
+
+class JIT002(Rule):
+    """Host-synchronizing calls inside a function jitted in this module:
+    ``.item()``/``.tolist()``, ``bool()/int()/float()`` on non-literals,
+    and ``np.asarray``/``np.array`` staging (TracerArrayConversionError
+    or a silent trace-time constant)."""
+    name = "JIT002"
+    NP_STAGING = frozenset({"np.asarray", "np.array", "numpy.asarray",
+                            "numpy.array", "onp.asarray", "onp.array"})
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        seen: set[int] = set()
+        for fn in _jitted_functions(module.tree):
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr in ("item", "tolist"):
+                    yield module.finding(
+                        self.name, node,
+                        f".{f.attr}() forces a host sync inside a jitted "
+                        "function")
+                elif (isinstance(f, ast.Name) and f.id in ("bool", "int", "float")
+                      and node.args
+                      and not isinstance(node.args[0], ast.Constant)):
+                    yield module.finding(
+                        self.name, node,
+                        f"{f.id}() on a traced value forces a host sync "
+                        "inside a jitted function")
+                elif _dotted(f) in self.NP_STAGING:
+                    yield module.finding(
+                        self.name, node,
+                        f"{_dotted(f)}() stages through host numpy inside "
+                        "a jitted function (TracerArrayConversionError or "
+                        "a baked-in constant)")
+
+
+# -- JIT003 -----------------------------------------------------------------
+
+class JIT003(Rule):
+    """Python scalar literals passed to a jitted callable that has no
+    static_argnums/static_argnames: each distinct Python type (int vs
+    float vs bool) re-specializes the compiled program — a silent
+    recompile.  Pass a jnp array or mark the argument static."""
+    name = "JIT003"
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        jitted: set[str] = set()
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            call = node.value
+            if (isinstance(call, ast.Call)
+                    and _dotted(call.func) in ("jit", "jax.jit")
+                    and not any(kw.arg in ("static_argnums", "static_argnames")
+                                for kw in call.keywords)):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        jitted.add(tgt.id)
+        if not jitted:
+            return
+        for node in ast.walk(module.tree):
+            if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                    and node.func.id in jitted):
+                for arg in node.args:
+                    v = arg.operand if (isinstance(arg, ast.UnaryOp)
+                                        and isinstance(arg.op, ast.USub)) else arg
+                    if isinstance(v, ast.Constant) and \
+                            isinstance(v.value, (bool, int, float)):
+                        yield module.finding(
+                            self.name, node,
+                            f"Python scalar literal passed to jitted "
+                            f"'{node.func.id}' (no static markings): type "
+                            "changes silently retrigger compilation")
+                        break
+
+
+# -- DTY001 -----------------------------------------------------------------
+
+class DTY001(Rule):
+    """float64 ``astype``/``dtype=`` in a serving-path module, against the
+    ServeSpec dtype policy (serving is f32 end-to-end; f64 is the offline
+    reference dtype).  Dtype-conditional ternaries that inspect an input's
+    ``.dtype`` are exempt — mirroring the caller's dtype is the policy."""
+    name = "DTY001"
+    SCOPE = ("repro/serving/", "repro/launch/", "repro/kernels/",
+             "repro/core/api.py", "repro/core/ppic.py")
+
+    @staticmethod
+    def _is_f64(node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Constant) and sub.value == "float64":
+                return True
+            if isinstance(sub, (ast.Attribute, ast.Name)) and \
+                    _dotted(sub).split(".")[-1] == "float64":
+                return True
+        return False
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not _in_scope(module.path, self.SCOPE):
+            return
+        # anything under a dtype-conditional ternary is policy-compliant
+        exempt: set[int] = set()
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.IfExp) and any(
+                    isinstance(s, ast.Attribute) and s.attr == "dtype"
+                    for s in ast.walk(node.test)):
+                for sub in ast.walk(node):
+                    exempt.add(id(sub))
+        for node in ast.walk(module.tree):
+            if id(node) in exempt or not isinstance(node, ast.Call):
+                continue
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args
+                    and self._is_f64(node.args[0])):
+                yield module.finding(
+                    self.name, node,
+                    "astype(float64) in a serving-path module violates the "
+                    "ServeSpec f32 dtype policy")
+            for kw in node.keywords:
+                if kw.arg == "dtype" and id(kw.value) not in exempt and \
+                        self._is_f64(kw.value):
+                    yield module.finding(
+                        self.name, node,
+                        "dtype=float64 in a serving-path module violates "
+                        "the ServeSpec f32 dtype policy")
+
+
+# -- DET001 -----------------------------------------------------------------
+
+class DET001(Rule):
+    """Unseeded RNG or wall-clock *calls* in deterministic-replay modules.
+    References (e.g. ``sleep=time.sleep`` as an injectable default) are
+    fine; calling the global clock or an unseeded sampler inside replay
+    logic is not."""
+    name = "DET001"
+    SCOPE = ("repro/serving/chaos.py", "repro/serving/health.py",
+             "repro/serving/stats.py", "repro/serving/scheduler.py")
+    GLOBAL_SAMPLERS = frozenset({
+        "rand", "randn", "randint", "random", "random_sample", "choice",
+        "shuffle", "permutation", "normal", "uniform", "standard_normal"})
+    CLOCKS = frozenset({"time.time", "time.monotonic", "time.perf_counter",
+                        "time.time_ns", "time.monotonic_ns"})
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not _in_scope(module.path, self.SCOPE):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            if name in self.CLOCKS:
+                yield module.finding(
+                    self.name, node,
+                    f"{name}() call in a deterministic-replay module; "
+                    "thread an injectable clock instead")
+            elif name.startswith("random."):
+                yield module.finding(
+                    self.name, node,
+                    f"stdlib global-RNG call {name}() breaks seeded "
+                    "replay; use np.random.RandomState(seed)")
+            elif name in ("np.random.RandomState", "numpy.random.RandomState",
+                          "np.random.default_rng", "numpy.random.default_rng"):
+                if not node.args and not node.keywords:
+                    yield module.finding(
+                        self.name, node,
+                        f"{name}() without a seed breaks deterministic "
+                        "replay")
+            elif (name.startswith(("np.random.", "numpy.random."))
+                  and name.split(".")[-1] in self.GLOBAL_SAMPLERS):
+                yield module.finding(
+                    self.name, node,
+                    f"{name}() samples numpy's process-global RNG; use a "
+                    "seeded RandomState")
+
+
+# -- FRZ001 -----------------------------------------------------------------
+
+class FRZ001(Rule):
+    """Attribute assignment on a frozen plan/spec dataclass.  Frozen
+    classes are collected from the module itself plus the repo's known
+    frozen API types, so cross-module mutation of a ``spec``/``plan``
+    parameter is caught too.  ``object.__setattr__`` is only legitimate
+    inside ``__post_init__``."""
+    name = "FRZ001"
+    KNOWN_FROZEN = frozenset({
+        "ServeSpec", "ServePlan", "PICServePlan", "GPMethod", "FittedGP",
+        "HealthPolicy", "FaultPlan", "KernelSpec"})
+
+    @staticmethod
+    def _frozen_classes(tree: ast.Module) -> set[str]:
+        out = set()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call) and \
+                        _dotted(dec.func) in ("dataclass", "dataclasses.dataclass"):
+                    for kw in dec.keywords:
+                        if kw.arg == "frozen" and \
+                                isinstance(kw.value, ast.Constant) and \
+                                kw.value.value is True:
+                            out.add(node.name)
+        return out
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        local_frozen = self._frozen_classes(module.tree)
+        frozen = local_frozen | self.KNOWN_FROZEN
+
+        # 1. methods of locally-defined frozen classes
+        for node in ast.walk(module.tree):
+            if not (isinstance(node, ast.ClassDef) and node.name in local_frozen):
+                continue
+            for meth in node.body:
+                if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                in_post_init = meth.name == "__post_init__"
+                for sub in ast.walk(meth):
+                    if isinstance(sub, (ast.Assign, ast.AugAssign)):
+                        tgts = sub.targets if isinstance(sub, ast.Assign) \
+                            else [sub.target]
+                        for t in tgts:
+                            if (isinstance(t, ast.Attribute)
+                                    and isinstance(t.value, ast.Name)
+                                    and t.value.id == "self"):
+                                yield module.finding(
+                                    self.name, sub,
+                                    f"direct field assignment in frozen "
+                                    f"dataclass {node.name} raises "
+                                    "FrozenInstanceError; use "
+                                    "dataclasses.replace")
+                    if (not in_post_init and isinstance(sub, ast.Call)
+                            and _dotted(sub.func) == "object.__setattr__"):
+                        yield module.finding(
+                            self.name, sub,
+                            f"object.__setattr__ outside __post_init__ "
+                            f"mutates frozen dataclass {node.name}")
+
+        # 2. mutation through a variable known to hold a frozen instance
+        for fn in _functions(module.tree):
+            frozen_vars: set[str] = set()
+            args = fn.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                if a.annotation is not None and \
+                        _dotted(a.annotation).split(".")[-1] in frozen:
+                    frozen_vars.add(a.arg)
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Assign) and \
+                        isinstance(sub.value, ast.Call) and \
+                        _dotted(sub.value.func).split(".")[-1] in frozen:
+                    for t in sub.targets:
+                        if isinstance(t, ast.Name):
+                            frozen_vars.add(t.id)
+            if not frozen_vars:
+                continue
+            for sub in ast.walk(fn):
+                if isinstance(sub, (ast.Assign, ast.AugAssign)):
+                    tgts = sub.targets if isinstance(sub, ast.Assign) \
+                        else [sub.target]
+                    for t in tgts:
+                        if (isinstance(t, ast.Attribute)
+                                and isinstance(t.value, ast.Name)
+                                and t.value.id in frozen_vars):
+                            yield module.finding(
+                                self.name, sub,
+                                f"assignment to field of frozen instance "
+                                f"'{t.value.id}' raises "
+                                "FrozenInstanceError; use "
+                                "dataclasses.replace")
+
+
+ALL_RULES = (JIT001, JIT002, JIT003, DTY001, DET001, FRZ001)
+
+
+def default_rules() -> list[Rule]:
+    return [cls() for cls in ALL_RULES]

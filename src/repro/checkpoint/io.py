@@ -36,7 +36,6 @@ def save(path: str | pathlib.Path, tree) -> None:
     path = pathlib.Path(path)
     tmp = path.with_suffix(".tmp")
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
-    manifest = []
     with open(tmp, "wb") as f:
         header_entries = []
         blobs = []

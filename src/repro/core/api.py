@@ -164,6 +164,22 @@ def check_machine_index(n_machines: int, machine: int) -> None:
             f"machine {machine} out of range for {n_machines} machines")
 
 
+def concrete_alive_mask(alive) -> np.ndarray | None:
+    """Host view of a store's alive mask, or ``None`` while tracing.
+
+    Host-side maintenance ops (retire/revive no-op checks, ``to_state``
+    compaction) need Python truthiness on the mask — which is exactly the
+    ``TracerBoolConversionError`` bug class that hit ``PICStore.to_state``
+    (lint rule JIT001). Every such branch goes through this guard and
+    handles the ``None`` case explicitly: either a clear TypeError
+    (data-dependent host work, impossible under trace) or the all-alive
+    fast path (a traced store is all-alive by construction, because the
+    single-machine mutators reject traced masks)."""
+    if isinstance(alive, jax.core.Tracer):
+        return None
+    return np.asarray(alive)
+
+
 # ---------------------------------------------------------------------------
 # ServeSpec — phase 1's input: every per-deployment serving decision, once.
 # ---------------------------------------------------------------------------
@@ -450,10 +466,18 @@ class ServePlan:
         bucket = self.bucket_for(u)
         if bucket == u:
             return U, u
+        if isinstance(U, jax.core.Tracer):
+            # inside an outer jit the pad must stay on device; u and the
+            # bucket are static under trace, and compile-per-batch-length
+            # is the OUTER program's choice (host serving traffic never
+            # takes this branch)
+            pad = jax.numpy.zeros((bucket - u,) + tuple(U.shape[1:]),
+                                  U.dtype)
+            self.stats.n_padded_rows += bucket - u   # counted per trace
+            return jax.numpy.concatenate([U, pad]), u
         # padding is host-side serving staging by design (an eager device
         # pad would compile once per distinct batch length — the serving
-        # tail-latency failure mode); bucket ladders are a serving policy,
-        # so a padded path inside jax transforms is unsupported
+        # tail-latency failure mode); bucket ladders are a serving policy
         Un = np.asarray(U)
         buf = np.zeros((bucket,) + Un.shape[1:], Un.dtype)
         buf[:u] = Un

@@ -165,7 +165,14 @@ def retire(store: SummaryStore, machine: int) -> SummaryStore:
     """Drop a machine's contribution (failure or decommission): rank-b
     DOWNdate of the cached factor. No-op if already retired."""
     api.check_machine_index(store.alive.shape[0], machine)
-    if not bool(store.alive[machine]):
+    alive = api.concrete_alive_mask(store.alive)
+    if alive is None:
+        raise TypeError(
+            "retire() branches on the alive mask host-side (the "
+            "already-retired no-op check) and cannot run under jit/vmap; "
+            "flip machines wholesale with with_alive(store, mask), whose "
+            "refold path traces")
+    if not alive[machine]:
         return store
     Sdd_L = linalg.chol_update_rank(store.Sdd_L, store.F[machine], sign=-1.0)
     return store._replace(alive=store.alive.at[machine].set(False),
@@ -176,7 +183,14 @@ def retire(store: SummaryStore, machine: int) -> SummaryStore:
 def revive(store: SummaryStore, machine: int) -> SummaryStore:
     """Fold a previously-retired machine back in (rank-b update)."""
     api.check_machine_index(store.alive.shape[0], machine)
-    if bool(store.alive[machine]):
+    alive = api.concrete_alive_mask(store.alive)
+    if alive is None:
+        raise TypeError(
+            "revive() branches on the alive mask host-side (the "
+            "already-alive no-op check) and cannot run under jit/vmap; "
+            "flip machines wholesale with with_alive(store, mask), whose "
+            "refold path traces")
+    if alive[machine]:
         return store
     Sdd_L = linalg.chol_update_rank(store.Sdd_L, store.F[machine])
     return store._replace(alive=store.alive.at[machine].set(True),

@@ -352,7 +352,14 @@ class PICFStore:
 
     def retire(self, machine: int) -> "PICFStore":
         api.check_machine_index(self.alive.shape[0], machine)
-        if not bool(self.alive[machine]):
+        alive = api.concrete_alive_mask(self.alive)
+        if alive is None:
+            raise TypeError(
+                "PICFStore.retire() branches on the alive mask host-side "
+                "(the already-retired no-op check) and cannot run under "
+                "jit/vmap; retire machines before entering the traced "
+                "region")
+        if not alive[machine]:
             return self
         return dataclasses.replace(
             self,
@@ -363,7 +370,14 @@ class PICFStore:
 
     def revive(self, machine: int) -> "PICFStore":
         api.check_machine_index(self.alive.shape[0], machine)
-        if bool(self.alive[machine]):
+        alive = api.concrete_alive_mask(self.alive)
+        if alive is None:
+            raise TypeError(
+                "PICFStore.revive() branches on the alive mask host-side "
+                "(the already-alive no-op check) and cannot run under "
+                "jit/vmap; revive machines before entering the traced "
+                "region")
+        if alive[machine]:
             return self
         return dataclasses.replace(
             self,
@@ -374,10 +388,15 @@ class PICFStore:
 
     def to_state(self) -> api.PICFState:
         ydd = linalg.chol_solve(self.Phi_L, self.yF[:, None])[:, 0]  # eq. 22
-        if bool(self.alive.all()):
-            # streaming common case: pass the block arrays by reference
+        alive = api.concrete_alive_mask(self.alive)
+        if alive is None or alive.all():
+            # streaming common case: pass the block arrays by reference.
+            # A TRACED store is all-alive by construction (retire/revive
+            # reject traced masks), so this branch is also the only
+            # realizable one under jit — the PR-7 to_state bug class,
+            # fixed the same way as PICStore.to_state
             return api.PICFState(self.Xb, self.yb, self.F, self.Phi_L, ydd)
-        idx = jnp.asarray(np.flatnonzero(np.asarray(self.alive)))
+        idx = jnp.asarray(np.flatnonzero(alive))
         return api.PICFState(self.Xb[idx], self.yb[idx], self.F[idx],
                              self.Phi_L, ydd)
 

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import no_retrace
 from repro.core import api, clustering
 from repro.core import covariance as cov
 from repro.core import linalg
@@ -259,11 +260,17 @@ def _block_posterior_diag_cinv(kfn, params, state: api.PICState, Um,
     return mean, var
 
 
+@no_retrace("ppic.cinv_blocks")
 @jax.jit
 def cinv_blocks(C_L: jax.Array) -> jax.Array:
     """(M, b, b) dense symmetric inverses ``(C_L C_Lᵀ)⁻¹`` per block — the
     one-time plan-build cost behind ``ServeSpec(cached_cinv=True)``; every
-    routed flush thereafter multiplies instead of solving."""
+    routed flush thereafter multiplies instead of solving.
+
+    Under the ``no_retrace`` contract: after a deployment's warmup
+    ``contracts.freeze()``, a rebind/refresh must only ever call this with
+    already-seen (M, b, b) signatures — a new signature mid-serving is a
+    silent recompile the audit flags."""
     eye = jnp.eye(C_L.shape[-1], dtype=C_L.dtype)
     return jax.vmap(lambda L: linalg.chol_solve(L, eye))(C_L)
 
@@ -392,7 +399,6 @@ def predict_routed(kfn, params, state: api.PICState, U) -> GPPosterior:
     across blocks — the routed analogue of ``predict_batch``'s
     block-diagonal dense view.
     """
-    u = U.shape[0]
     M = state.Xb.shape[0]
     assign = route_queries(state, U)
     Ub, order, block_of, slot = scatter_by_block(U, assign, M)
@@ -497,6 +503,12 @@ class PICServePlan(api.ServePlan):
         traced value, zero recompiles once warmed. Which rows degraded is
         surfaced via ``stats.last_degraded`` (None on fully-healthy
         flushes, where the bitwise-unchanged baseline program runs)."""
+        if isinstance(U, jax.core.Tracer):
+            raise TypeError(
+                "routed_diag stages on the host (nearest-centroid routing "
+                "and pad-packing pick data-dependent programs) and cannot "
+                "run under jit/vmap; call it with concrete batches, or "
+                "use plan.diag for the traceable unrouted path")
         Up, u = self._padded(U)
         assign, g = self._route(np.asarray(Up), u)
         self.stats.last_degraded = None

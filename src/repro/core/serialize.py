@@ -37,6 +37,7 @@ import pathlib
 import zipfile
 import zlib
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -127,6 +128,14 @@ def save_state(path, state) -> pathlib.Path:
             f"cannot serialize unregistered state type {name!r}; "
             f"registered: {sorted(STATE_TYPES)} (register_state to extend)")
     path = pathlib.Path(path)
+    traced = [f for f, v in zip(state._fields, state)
+              if isinstance(v, jax.core.Tracer)]
+    if traced:
+        raise TypeError(
+            f"save_state({name}) materializes every field on the host and "
+            f"cannot run under jit/vmap (traced fields: {traced}); "
+            "checkpoint from the serving loop, not inside a traced "
+            "function")
     payload = {_FIELD + f: np.asarray(v) for f, v in
                zip(state._fields, state)}
     with open(path, "wb") as fh:
@@ -351,7 +360,16 @@ def save_store(path, store, *, spec: api.ServeSpec | None = None
             f"cannot serialize store type {name!r}; "
             f"supported: {sorted(STORE_TYPES)}")
     flatten, _, _ = STORE_TYPES[name]
-    payload = {k: np.asarray(v) for k, v in flatten(store).items()}
+    leaves = flatten(store)
+    traced = [k for k, v in leaves.items()
+              if isinstance(v, jax.core.Tracer)]
+    if traced:
+        raise TypeError(
+            f"save_store({name}) materializes every array on the host and "
+            f"cannot run under jit/vmap (traced leaves: {traced}); "
+            "checkpoint from the serving loop, not inside a traced "
+            "function")
+    payload = {k: np.asarray(v) for k, v in leaves.items()}
     payload.update({_PARAM + k: np.asarray(v)
                     for k, v in store.params.items()})
     payload["__checksums__"] = _checksum_meta(

@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the SSD intra-chunk kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -60,7 +60,6 @@ deadline). benchmarks/bench_serve_latency.py quantifies all three.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Any, Callable
 

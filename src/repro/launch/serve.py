@@ -7,8 +7,6 @@ sequence shards.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -16,7 +14,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
 from repro.models.attention import KVCache
-from repro.models.ssm import SSMState, dims as ssm_dims
+from repro.models.ssm import SSMState
 from repro.parallel import sharding as shd
 
 

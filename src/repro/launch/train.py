@@ -8,7 +8,6 @@ and donates the state.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

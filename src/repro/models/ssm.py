@@ -83,7 +83,6 @@ def ssd_scan(xh, dt, A, Bm, Cm, chunk: int):
     A: (H,) negative decay rates, Bm/Cm: (B,L,N). Returns (B,L,H,P) and the
     final state (B,H,P,N)."""
     Bsz, L, H, P = xh.shape
-    N = Bm.shape[-1]
     nc = L // chunk
     c = lambda t: t.reshape((Bsz, nc, chunk) + t.shape[2:])
     xc, dtc, Bc, Cc = c(xh), c(dt), c(Bm), c(Cm)

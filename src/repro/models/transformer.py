@@ -8,7 +8,6 @@ remainder (n_layers % period) is unrolled.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -164,7 +163,6 @@ def encode(params, frames, cfg: ModelConfig, *, attn_impl="auto",
     embeddings (B, Te, d) — the conv frontend is a stub per the brief."""
     _, norm = layers.make_norm(cfg)
     x = frames
-    desc = LayerDesc(kind="attn")
 
     def body(x, p):
         h = norm(x, p["ln1"])

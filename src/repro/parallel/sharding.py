@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 DP = ("pod", "data")     # data/FSDP axes (pod may be absent on 1-pod meshes)

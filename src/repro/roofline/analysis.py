@@ -22,8 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any
-
 from repro.roofline import hlo_parse, hw
 
 

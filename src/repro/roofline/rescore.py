@@ -28,7 +28,6 @@ def main(dirpath: str, reprobe_all: bool = False):
             continue
         cfg = get_config(rec["arch"])
         shape = SHAPES[rec["shape"]]
-        chips = rec["chips"]
         # production DP product: single 16 (of 256=16x16), multi 32 (2x16x16)
         mg = 32 if rec["mesh"] == "multi" else 16
         needs_probe = reprobe_all or bool(cfg.moe_experts)

@@ -16,7 +16,6 @@ stacked block tensors for a new machine count.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def plan_assignment(n_blocks: int, n_machines: int) -> list[range]:

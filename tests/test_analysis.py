@@ -1,0 +1,629 @@
+"""Static analyzer + compiled-program contract auditor (repro.analysis,
+ISSUE 10).
+
+Acceptance:
+
+* per-rule fixture snippets assert true positives, known false-positive
+  guards, and suppression comments; the JIT001 rule flags a minimal
+  reproduction of the PR-7 ``PICStore.to_state`` tracer bug in its
+  PRE-fix form (and stays quiet on the fixed form);
+* the baseline file round-trips: burned-down findings stop failing the
+  CLI, editing the flagged line re-surfaces them;
+* the analyzer runs clean over the repo's own ``src/`` tree;
+* every tracer-safety fix the analyzer surfaced has a regression test
+  (online/picf retire-revive, picf.to_state, ServePlan._padded,
+  ppic.routed_diag, serialize.save_state/save_store);
+* the contract auditor proves fingerprint-identical executables across
+  >= 3 rebind generations and a multi-tenant interleaving, and the
+  ``@no_retrace`` registry flags post-freeze signature growth.
+"""
+import ast
+import dataclasses
+import pathlib
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import contracts, engine
+from repro.analysis import rules as R
+from repro.analysis.__main__ import main as cli_main
+from repro.core import api, online, serialize
+from repro.parallel.runner import VmapRunner
+
+from helpers import make_problem
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_rule(src, rule, path="src/repro/core/fixture.py"):
+    """All unsuppressed findings of one rule over a source snippet."""
+    src = textwrap.dedent(src)
+    mod = engine.ModuleInfo(path=path, source=src, tree=ast.parse(src))
+    return [f for f in rule.check(mod)
+            if not engine.is_suppressed(f, mod.lines)]
+
+
+# ---------------------------------------------------------------------------
+# engine: suppressions, baseline, reporters
+# ---------------------------------------------------------------------------
+
+BUGGY = """
+def retire(store, machine):
+    if not bool(store.alive[machine]):
+        return store
+"""
+
+
+class TestEngine:
+    def test_bare_suppression_silences_any_rule(self):
+        src = BUGGY.replace("machine]):",
+                            "machine]):  # analysis: ignore")
+        assert run_rule(src, R.JIT001()) == []
+
+    def test_scoped_suppression_matches_rule(self):
+        src = BUGGY.replace("machine]):",
+                            "machine]):  # analysis: ignore[JIT001]")
+        assert run_rule(src, R.JIT001()) == []
+
+    def test_scoped_suppression_other_rule_does_not_silence(self):
+        src = BUGGY.replace("machine]):",
+                            "machine]):  # analysis: ignore[DET001]")
+        assert len(run_rule(src, R.JIT001())) == 1
+
+    def test_suppression_on_line_above(self):
+        src = BUGGY.replace(
+            "    if not bool",
+            "    # analysis: ignore[JIT001]\n    if not bool")
+        assert run_rule(src, R.JIT001()) == []
+
+    def test_baseline_round_trip(self, tmp_path):
+        f = tmp_path / "mod.py"
+        f.write_text(textwrap.dedent(BUGGY))
+        # rule scoping is path-based; parse via run_rule for a scoped path
+        findings = run_rule(BUGGY, R.JIT001())
+        assert len(findings) == 1
+        bl = tmp_path / "baseline.json"
+        engine.write_baseline(bl, findings)
+        assert engine.new_findings(findings, engine.load_baseline(bl)) == []
+        # editing the flagged line invalidates its baseline entry
+        edited = run_rule(BUGGY.replace("store.alive", "store2.alive"),
+                          R.JIT001())
+        assert len(engine.new_findings(edited,
+                                       engine.load_baseline(bl))) == 1
+
+    def test_reporters(self):
+        findings = run_rule(BUGGY, R.JIT001())
+        text = engine.to_text(findings)
+        assert "JIT001" in text and "fixture.py:3" in text
+        as_json = engine.to_json(findings)
+        assert '"n_findings": 1' in as_json
+        assert engine.to_text([]).startswith("analysis: clean")
+
+
+# ---------------------------------------------------------------------------
+# JIT001 — the PR-7 to_state bug class
+# ---------------------------------------------------------------------------
+
+PR7_PREFIX_TO_STATE = """
+def to_state(store, S):
+    if bool(store.alive.all()):
+        return _state_all_alive(store, S)
+    idx = np.flatnonzero(np.asarray(store.alive))
+    return _state_compacted(store, S, idx)
+"""
+
+PR7_FIXED_TO_STATE = """
+def to_state(store, S):
+    if isinstance(store.alive, jax.core.Tracer):
+        all_alive = True   # traced store: all-alive by construction
+    else:
+        all_alive = bool(np.asarray(store.alive).all())
+    if all_alive:
+        return _state_all_alive(store, S)
+    idx = np.flatnonzero(np.asarray(store.alive))
+    return _state_compacted(store, S, idx)
+"""
+
+
+class TestJIT001:
+    def test_flags_pr7_to_state_prefix_form(self):
+        """Acceptance: the exact PR-7 TracerBoolConversionError shape."""
+        found = run_rule(PR7_PREFIX_TO_STATE, R.JIT001())
+        assert len(found) == 1
+        assert found[0].rule == "JIT001"
+        assert "store.alive.all()" in found[0].snippet
+
+    def test_fixed_to_state_form_is_clean(self):
+        """The isinstance-Tracer guard IS the sanctioned host/trace
+        split; the fixed function must not be re-flagged."""
+        assert run_rule(PR7_FIXED_TO_STATE, R.JIT001()) == []
+
+    def test_concrete_alive_mask_helper_exempts(self):
+        src = """
+        def retire(store, machine):
+            alive = api.concrete_alive_mask(store.alive)
+            if alive is None:
+                raise TypeError("no tracing here")
+            if not alive[machine]:
+                return store
+        """
+        assert run_rule(src, R.JIT001()) == []
+
+    def test_flags_subscripted_mask_truthiness(self):
+        assert len(run_rule(BUGGY, R.JIT001())) == 1
+
+    def test_flags_while_and_assert_and_ternary(self):
+        src = """
+        def f(st):
+            assert st.alive.any()
+            while st.mask.all():
+                pass
+            x = 1 if st.block_alive[0] else 2
+        """
+        assert len(run_rule(src, R.JIT001())) == 3
+
+    def test_out_of_scope_path_not_flagged(self):
+        assert run_rule(BUGGY, R.JIT001(),
+                        path="src/repro/serving/fixture.py") == []
+
+    def test_plain_name_subscript_not_flagged(self):
+        """Host-side `mask[machine]` after a guard is the fixed idiom."""
+        src = """
+        def f(mask, machine):
+            if not mask[machine]:
+                return None
+        """
+        assert run_rule(src, R.JIT001()) == []
+
+
+# ---------------------------------------------------------------------------
+# JIT002 — host syncs inside jitted functions
+# ---------------------------------------------------------------------------
+
+class TestJIT002:
+    def test_flags_item_and_asarray_in_jit_decorated(self):
+        src = """
+        @jax.jit
+        def f(x):
+            v = x.sum().item()
+            a = np.asarray(x)
+            return v, a
+        """
+        found = run_rule(src, R.JIT002())
+        assert {f.message.split("(")[0].split()[0] for f in found} == \
+            {".item", "np.asarray"}
+
+    def test_flags_bool_on_traced_value(self):
+        src = """
+        @jax.jit
+        def f(x):
+            return bool(x > 0)
+        """
+        assert len(run_rule(src, R.JIT002())) == 1
+
+    def test_jit_wrapped_def_is_covered(self):
+        src = """
+        def f(x):
+            return float(x)
+        g = jax.jit(f)
+        """
+        assert len(run_rule(src, R.JIT002())) == 1
+
+    def test_partial_jit_decorator_is_covered(self):
+        src = """
+        @partial(jax.jit, static_argnames=("k",))
+        def f(x, k):
+            return x.tolist()
+        """
+        assert len(run_rule(src, R.JIT002())) == 1
+
+    def test_plain_function_not_flagged(self):
+        src = """
+        def f(x):
+            return np.asarray(x).item()
+        """
+        assert run_rule(src, R.JIT002()) == []
+
+    def test_literal_cast_not_flagged(self):
+        src = """
+        @jax.jit
+        def f(x):
+            return x * float(2)
+        """
+        assert run_rule(src, R.JIT002()) == []
+
+
+# ---------------------------------------------------------------------------
+# JIT003 — scalar args to jitted callables
+# ---------------------------------------------------------------------------
+
+class TestJIT003:
+    def test_flags_scalar_literal_arg(self):
+        src = """
+        f = jax.jit(g)
+        y = f(x, 1.0)
+        """
+        assert len(run_rule(src, R.JIT003())) == 1
+
+    def test_static_markings_exempt(self):
+        src = """
+        f = jax.jit(g, static_argnums=(1,))
+        y = f(x, 1.0)
+        """
+        assert run_rule(src, R.JIT003()) == []
+
+    def test_array_args_clean(self):
+        src = """
+        f = jax.jit(g)
+        y = f(x, z)
+        """
+        assert run_rule(src, R.JIT003()) == []
+
+
+# ---------------------------------------------------------------------------
+# DTY001 — float64 leaks into the serving path
+# ---------------------------------------------------------------------------
+
+class TestDTY001:
+    PATH = "src/repro/serving/fixture.py"
+
+    def test_flags_astype_and_dtype_kwarg(self):
+        src = """
+        def stage(U):
+            a = U.astype(jnp.float64)
+            b = np.zeros((4,), dtype=np.float64)
+            return a, b
+        """
+        assert len(run_rule(src, R.DTY001(), path=self.PATH)) == 2
+
+    def test_dtype_conditional_ternary_exempt(self):
+        """kernels/rbf/xcov.py mirrors the caller's dtype — policy, not
+        a leak."""
+        src = """
+        def stage(Xq):
+            acc = jnp.float64 if Xq.dtype == jnp.float64 else jnp.float32
+            return Xq.astype(acc)
+        """
+        assert run_rule(src, R.DTY001(), path=self.PATH) == []
+
+    def test_out_of_scope_module_clean(self):
+        src = """
+        def reference(U):
+            return U.astype(np.float64)
+        """
+        assert run_rule(src, R.DTY001(),
+                        path="src/repro/core/gp.py") == []
+
+
+# ---------------------------------------------------------------------------
+# DET001 — determinism of replay modules
+# ---------------------------------------------------------------------------
+
+class TestDET001:
+    PATH = "src/repro/serving/chaos.py"
+
+    def test_flags_wall_clock_and_unseeded_rng(self):
+        src = """
+        def schedule(self):
+            t = time.time()
+            rng = np.random.RandomState()
+            r = random.random()
+            return t, rng, r
+        """
+        assert len(run_rule(src, R.DET001(), path=self.PATH)) == 3
+
+    def test_seeded_rng_and_injected_clock_clean(self):
+        src = """
+        def __init__(self, plan, sleep=time.sleep):
+            self._rng = np.random.RandomState(plan.seed)
+            self._sleep = sleep
+        """
+        assert run_rule(src, R.DET001(), path=self.PATH) == []
+
+    def test_global_numpy_sampler_flagged(self):
+        src = """
+        def jitter(self):
+            return np.random.uniform()
+        """
+        assert len(run_rule(src, R.DET001(), path=self.PATH)) == 1
+
+
+# ---------------------------------------------------------------------------
+# FRZ001 — frozen dataclass mutation
+# ---------------------------------------------------------------------------
+
+class TestFRZ001:
+    def test_flags_self_assignment_in_frozen_class(self):
+        src = """
+        @dataclasses.dataclass(frozen=True)
+        class Plan:
+            n: int
+            def bump(self):
+                self.n = self.n + 1
+        """
+        assert len(run_rule(src, R.FRZ001())) == 1
+
+    def test_post_init_setattr_is_the_idiom(self):
+        src = """
+        @dataclasses.dataclass(frozen=True)
+        class Plan:
+            n: int
+            def __post_init__(self):
+                object.__setattr__(self, "n", int(self.n))
+        """
+        assert run_rule(src, R.FRZ001()) == []
+
+    def test_setattr_outside_post_init_flagged(self):
+        src = """
+        @dataclasses.dataclass(frozen=True)
+        class Plan:
+            n: int
+            def bump(self):
+                object.__setattr__(self, "n", self.n + 1)
+        """
+        assert len(run_rule(src, R.FRZ001())) == 1
+
+    def test_known_frozen_param_mutation_flagged(self):
+        src = """
+        def tweak(spec: ServeSpec):
+            spec.max_batch = 32
+            return spec
+        """
+        assert len(run_rule(src, R.FRZ001())) == 1
+
+    def test_replace_idiom_clean(self):
+        src = """
+        def tweak(spec: ServeSpec):
+            return dataclasses.replace(spec, max_batch=32)
+        """
+        assert run_rule(src, R.FRZ001()) == []
+
+    def test_unfrozen_dataclass_clean(self):
+        src = """
+        @dataclasses.dataclass
+        class Stats:
+            n: int = 0
+            def bump(self):
+                self.n += 1
+        """
+        assert run_rule(src, R.FRZ001()) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI + the repo's own tree
+# ---------------------------------------------------------------------------
+
+class TestCLI:
+    def test_repo_src_is_clean(self):
+        """The shipped tree carries zero findings — the baseline is empty
+        on purpose (acceptance criterion)."""
+        findings = engine.run_rules([REPO_ROOT / "src"],
+                                    [cls() for cls in R.ALL_RULES],
+                                    root=REPO_ROOT)
+        assert findings == []
+
+    def test_exit_codes_and_baseline_flow(self, tmp_path, monkeypatch):
+        bad = tmp_path / "src_repro_core_mod.py"
+        # path-scope the fixture file under a core/ dir
+        core = tmp_path / "src" / "repro" / "core"
+        core.mkdir(parents=True)
+        bad = core / "mod.py"
+        bad.write_text(textwrap.dedent(BUGGY))
+        monkeypatch.chdir(tmp_path)
+        assert cli_main(["src"]) == 1                      # new finding
+        assert cli_main(["src", "--write-baseline"]) == 0  # burn it down
+        assert cli_main(["src", "--baseline"]) == 0        # now known
+        bad.write_text(textwrap.dedent(BUGGY).replace("store", "st"))
+        assert cli_main(["src", "--baseline"]) == 1        # edited: resurfaces
+        assert cli_main(["nonexistent-dir"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# regression tests for the fixes the analyzer surfaced
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prob32():
+    return make_problem(n=48, u=12, s=8, M=4, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def runner(prob32):
+    return VmapRunner(M=prob32["M"])
+
+
+@pytest.fixture(scope="module")
+def ppitc_store(prob32, runner):
+    p = prob32
+    return api.init_store("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                          S=p["S"], runner=runner)
+
+
+class TestTracerSafetyFixes:
+    def test_online_retire_under_jit_raises_clear_error(self, ppitc_store):
+        """Pre-fix: bool(store.alive[machine]) raised a cryptic
+        TracerBoolConversionError mid-trace."""
+        with pytest.raises(TypeError, match="with_alive"):
+            jax.jit(lambda st: online.retire(st, 0))(ppitc_store.store)
+
+    def test_online_revive_under_jit_raises_clear_error(self, ppitc_store):
+        with pytest.raises(TypeError, match="with_alive"):
+            jax.jit(lambda st: online.revive(st, 0))(ppitc_store.store)
+
+    def test_online_retire_host_path_unchanged(self, ppitc_store):
+        st = online.retire(ppitc_store.store, 1)
+        assert not bool(np.asarray(st.alive)[1])
+        st2 = online.retire(st, 1)            # no-op branch
+        assert st2 is st
+        back = online.revive(st, 1)
+        np.testing.assert_array_equal(np.asarray(back.alive),
+                                      np.asarray(ppitc_store.store.alive))
+
+    def test_picf_to_state_traced_alive_takes_all_alive_path(self, prob32,
+                                                             runner):
+        """The exact PR-7 bug shape in picf, pre-fix:
+        ``if bool(self.alive.all())`` — TracerBoolConversionError when the
+        alive mask is traced. Post-fix the traced store takes the
+        by-reference path and matches the host result."""
+        p = prob32
+        store = api.init_store("picf", p["kfn"], p["params"], p["X"],
+                               p["y"], rank=16, runner=runner)
+        inner = store.store if hasattr(store, "store") else store
+        host = inner.to_state()
+
+        def traced_to_state(alive):
+            return dataclasses.replace(inner, alive=alive).to_state()
+
+        got = jax.jit(traced_to_state)(inner.alive)
+        for a, b in zip(host, got):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+
+    def test_picf_retire_under_jit_raises_clear_error(self, prob32, runner):
+        p = prob32
+        store = api.init_store("picf", p["kfn"], p["params"], p["X"],
+                               p["y"], rank=16, runner=runner)
+        inner = store.store if hasattr(store, "store") else store
+        with pytest.raises(TypeError, match="host-side"):
+            jax.jit(lambda alive:
+                    dataclasses.replace(inner, alive=alive).retire(0).alive
+                    )(inner.alive)
+
+    def test_padded_diag_traceable_when_pad_fires(self, prob32, runner):
+        """Pre-fix: ServePlan._padded staged through np.asarray, so an
+        outer jit over plan.diag exploded with TracerArrayConversionError
+        whenever the batch needed bucket padding."""
+        p = prob32
+        model = api.fit("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        plan = model.plan(api.ServeSpec(max_batch=8))
+        U = p["U"][:5]                        # 5 -> bucket pad fires
+        host_mean, host_var = plan.diag(np.asarray(U))
+        mean, var = jax.jit(lambda u: plan.diag(u))(jnp.asarray(U))
+        np.testing.assert_allclose(np.asarray(mean), np.asarray(host_mean),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(var), np.asarray(host_var),
+                                   rtol=1e-6)
+
+    def test_routed_diag_under_jit_raises_clear_error(self, prob32, runner):
+        """Pre-fix: a traced batch died deep inside _route with a cryptic
+        TracerArrayConversionError; now rejected at entry."""
+        p = prob32
+        model = api.fit("ppic", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        plan = model.plan(api.ServeSpec(max_batch=8, routed=True))
+        with pytest.raises(TypeError, match="routed_diag"):
+            jax.jit(lambda u: plan.routed_diag(u))(p["U"][:5])
+
+    def test_save_state_under_jit_raises_clear_error(self, prob32, runner,
+                                                     tmp_path):
+        p = prob32
+        model = api.fit("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        with pytest.raises(TypeError, match="save_state"):
+            jax.jit(lambda st: serialize.save_state(tmp_path / "s.npz", st)
+                    and st)(model.state)
+
+    def test_save_store_traced_leaves_raise_clear_error(self, monkeypatch,
+                                                        tmp_path):
+        class FakeStore:
+            params: dict = {}
+
+            def __init__(self, leaf):
+                self.leaf = leaf
+
+        monkeypatch.setitem(serialize.STORE_TYPES, "FakeStore",
+                            (lambda s: {"leaf": s.leaf}, None, None))
+        with pytest.raises(TypeError, match="save_store"):
+            jax.jit(lambda x: serialize.save_store(
+                tmp_path / "st.npz", FakeStore(x)) and x)(jnp.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# contract auditor
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def clean_registry():
+    contracts.reset_registry()
+    yield
+    contracts.reset_registry()
+
+
+class TestContracts:
+    def test_no_retrace_flags_post_freeze_signature(self, clean_registry):
+        @contracts.no_retrace("test.fn")
+        @jax.jit
+        def fn(x):
+            return x * 2
+
+        fn(jnp.ones(3))
+        fn(jnp.ones(4))
+        contracts.freeze()
+        fn(jnp.ones(3))                      # seen: fine
+        assert contracts.violations() == {}
+        fn(jnp.ones(5))                      # new signature post-freeze
+        assert contracts.violations() == {"test.fn": 1}
+        rep = contracts.registry_report()["test.fn"]
+        assert rep["n_calls"] == 4 and rep["n_signatures"] == 3
+
+    def test_scalar_type_change_is_a_new_signature(self, clean_registry):
+        @contracts.no_retrace("test.scalar")
+        def fn(x, s):
+            return x
+
+        fn(jnp.ones(3), 1)
+        contracts.freeze()
+        fn(jnp.ones(3), 1.0)                 # int -> float: JIT003 class
+        assert "test.scalar" in contracts.violations()
+
+    def test_rebind_generations_fingerprint_identical(self, prob32, runner):
+        """Acceptance: >= 3 rebind generations, identical jaxpr
+        fingerprints, zero new traces, trace counter restored."""
+        p = prob32
+        model = api.fit("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        plan = model.plan(api.ServeSpec(max_batch=8)).warmup(
+            int(p["U"].shape[1]))
+        U = np.asarray(p["U"][:5])
+        report = contracts.audit_rebind_generations(
+            plan, lambda pl: pl.diag(U), n_generations=3)
+        assert report["rebind_identical"]
+        assert report["rebind_new_traces"] == 0
+        assert report["n_rebind_generations"] == 3
+        assert report["n_audited"] >= 1
+        assert len(report["generations"]) == 3
+
+    def test_audit_restores_trace_counter(self, prob32, runner):
+        p = prob32
+        model = api.fit("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        plan = model.plan(api.ServeSpec(max_batch=8)).warmup(
+            int(p["U"].shape[1]))
+        U = np.asarray(p["U"][:5])
+        plan.diag(U)
+        before = plan.stats.n_traces
+        contracts.audit_plan(plan, lambda pl: pl.diag(U))
+        assert plan.stats.n_traces == before
+
+    def test_tenant_interleaving_identical(self, prob32, runner):
+        p = prob32
+        model = api.fit("ppitc", p["kfn"], p["params"], p["X"], p["y"],
+                        S=p["S"], runner=runner)
+        report = contracts.audit_tenant_interleaving(
+            model, api.ServeSpec(max_batch=8), np.asarray(p["U"][:6]))
+        assert report["n_lineages"] == 1
+        assert report["interleaving_identical"]
+        assert report["interleaving_new_traces"] == 0
+
+    @pytest.mark.slow
+    def test_run_audit_end_to_end(self, tmp_path):
+        """The CI artifact path: routed ppic deployment, full report."""
+        report = contracts.run_audit(str(tmp_path / "audit.json"))
+        assert report["ok"]
+        assert report["n_rebind_generations"] >= 3
+        assert (tmp_path / "audit.json").exists()
+        assert report["no_retrace"]["ppic.cinv_blocks"]["n_calls"] >= 1

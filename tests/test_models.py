@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import ARCH_NAMES, get_config, smoke_config
+from repro.configs.registry import ARCH_NAMES, smoke_config
 from repro.models import moe as moe_lib, ssm as ssm_lib
 from repro.models import layers, transformer as tf
 

@@ -17,9 +17,7 @@ Acceptance (ISSUE 8):
 * a ``save_store(..., spec=...)`` artifact re-admits the whole deployment
   (``TenantRegistry.admit_from_checkpoint``), bitwise.
 """
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (clustering, covariance as cov, gp, hyper, linalg,
-                        online, pitc, ppitc, support)
+                        online, pitc, support)
 from repro.parallel.runner import VmapRunner
 
 from helpers import make_problem

@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import LayerDesc
 from repro.configs.registry import smoke_config
 from repro.models import moe as moe_lib, transformer as tf
 from repro.parallel import sharding as shd

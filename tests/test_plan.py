@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api, gp, online, picf, pitc, ppic, ppitc, serialize
+from repro.core import api, gp, picf, ppic, ppitc, serialize
 from repro.core import covariance as cov
 from repro.launch.gp_serve import GPServer
 from repro.parallel.runner import VmapRunner

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api, clustering, ppic, ppitc, serialize
+from repro.core import api, clustering, ppic, serialize
 from repro.launch.gp_serve import GPServer
 from repro.parallel.runner import VmapRunner
 from repro.serving import (BlockDied, FaultInjector, FaultPlan, HealthPolicy,

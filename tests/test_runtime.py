@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import covariance as cov, online, pitc
+from repro.core import online, pitc
 from repro.parallel.runner import VmapRunner
 from repro.runtime import elastic, fault, straggler
 
@@ -23,7 +23,7 @@ class TestFault:
         p = make_problem()
         cl, _ = _cluster(p)
         cl = fault.fail(cl, 2)
-        glob = fault.recover_degraded(cl)
+        fault.recover_degraded(cl)
         mean, _ = cl.store.predict(p["U"])
         b = p["X"].shape[0] // p["M"]
         keep = jnp.concatenate([jnp.arange(0, 2 * b),

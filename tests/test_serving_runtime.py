@@ -84,7 +84,7 @@ class TestFailureDetector:
 
     def test_drives_fault_recovery(self):
         """Detector events -> summary-algebra recovery (end-to-end)."""
-        from repro.core import covariance as cov, online
+        from repro.core import online
         from repro.parallel.runner import VmapRunner
         from repro.runtime import fault
         from helpers import make_problem

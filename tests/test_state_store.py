@@ -2,7 +2,6 @@
 store lifecycle (assimilate / retire / revive / to_state), streamed routed
 serving, versioned state checkpointing, and the GPServer streaming surface.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

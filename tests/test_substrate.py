@@ -2,13 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import smoke_config
 from repro.data import loader, synthetic
 from repro.optim import compression
-from repro.optim.adam import Adam, cosine_schedule, global_norm
+from repro.optim.adam import Adam, cosine_schedule
 
 KEY = jax.random.PRNGKey(0)
 
@@ -69,7 +68,6 @@ class TestCheckpoint:
         """Full train loop resume: save at step k, restart, identical
         params at step k+n (fault-tolerance contract)."""
         from repro.launch import train as train_lib
-        from repro.models import transformer as tf
         cfg = smoke_config("olmo-1b")
         opt = Adam(lr=1e-3)
         state = train_lib.init_state(KEY, cfg, opt)
